@@ -1,0 +1,22 @@
+"""Paper Fig 4: performance and energy efficiency of Loom/Stripes relative
+to DPNN, all layers combined, 100% accuracy profiles."""
+from repro.core import cyclemodel as cm
+
+
+def main():
+    print("== Fig 4: all-layers perf / efficiency vs DPNN (100% profiles) ==")
+    designs = ("stripes", "lm1b", "lm2b", "lm4b")
+    print(f"{'network':11s}" + "".join(f"{d:>14s}" for d in designs))
+    for net in sorted(cm.NETWORKS):
+        vals = []
+        for d in designs:
+            s = cm.network_speedup(net, d, "100", "all")
+            e = cm.efficiency(d, s)
+            vals.append(f"{s:5.2f}/{e:5.2f}")
+        print(f"{net:11s}" + "".join(f"{v:>14s}" for v in vals))
+    print("(speedup/efficiency; paper Fig 4a/4b: LM_1b avg >3x perf, "
+          ">2.5x efficiency; LM_4b most energy-efficient)")
+
+
+if __name__ == "__main__":
+    main()

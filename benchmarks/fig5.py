@@ -1,0 +1,20 @@
+"""Paper Fig 5: scaling of LM_1b speedup vs DPNN as the equivalent peak
+compute bandwidth grows 32 -> 512 MACs/cycle (under-utilization growth)."""
+from repro.core import cyclemodel as cm
+
+
+def main():
+    print("== Fig 5: LM_1b speedup vs equivalent DPNN peak bandwidth ==")
+    curve = cm.scaling_curve("lm1b", "100")
+    prev = None
+    for macs, s in sorted(curve.items()):
+        note = ""
+        if prev is not None and s < prev:
+            note = "  (under-utilization growing, as in the paper)"
+        print(f"  {macs:4d} MACs/cyc  speedup {s:5.2f}{note}")
+        prev = s
+    assert curve[128] > curve[512], "paper: relative advantage drops at 512"
+
+
+if __name__ == "__main__":
+    main()

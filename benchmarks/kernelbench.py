@@ -1,0 +1,64 @@
+"""Kernel-level microbenchmark: the Loom bit-serial matmul's byte/FLOP law.
+
+On this CPU container wall-time of interpret-mode Pallas is meaningless;
+what IS meaningful (and what the paper claims) is how the WORK and the
+BYTES scale with precision. We verify, per (Pa, Pw):
+
+  * packed weight bytes == Pw/16 x bf16 baseline   (paper's storage law)
+  * plane-pass count    == ceil(Pa/ba) x ceil(Pw/bw)  (paper's cycle law)
+  * XLA path wall-time on CPU for the serial engine, as a sanity trend.
+
+Also times the dense bf16 path (the DPNN-equivalent) for reference.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack, engine, quantize as q
+
+
+def _time(f, *args, n=5):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = f(*args)
+    r.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    m, k, n = 256, 1024, 512
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+
+    dense = jax.jit(lambda a, b: a.astype(jnp.bfloat16) @ b.astype(jnp.bfloat16))
+    t_dense = _time(dense, x, w)
+    base_bytes = bitpack.baseline_nbytes((k, n))
+    print("== kernel bench: Loom bit-serial matmul laws ==")
+    print(f"  dense bf16 {m}x{k}x{n}: {t_dense:8.1f} us   "
+          f"weight bytes {base_bytes}")
+
+    for pa, pw, ba, bw in ((8, 8, 1, 1), (8, 8, 2, 2), (8, 8, 4, 4),
+                           (8, 8, 8, 8), (4, 4, 1, 1), (16, 16, 8, 8),
+                           (8, 11, 1, 1)):
+        cfg = engine.LoomConfig(a_bits=pa, w_bits=pw, a_plane_bits=ba,
+                                w_plane_bits=bw)
+        wq, ws = q.quantize(w, pw)
+        packed = bitpack.pack_weights(wq, pw)
+        pbytes = bitpack.packed_nbytes((k, n), pw)
+        f = jax.jit(lambda a: engine.loom_matmul(a, w, cfg, w_scale=ws, wq=wq))
+        t = _time(f, x)
+        passes = cfg.n_a_planes * cfg.n_w_planes
+        print(f"  LM ba={ba} bw={bw} Pa={pa:2d} Pw={pw:2d}: {t:8.1f} us   "
+              f"passes {passes:3d} (law {-(-pa // ba) * -(-pw // bw):3d})   "
+              f"bytes {pbytes} = {pbytes / base_bytes:.3f}x base "
+              f"(law {pw / 16:.3f})")
+        assert passes == -(-pa // ba) * -(-pw // bw)
+        assert pbytes == int(base_bytes * pw / 16)
+
+
+if __name__ == "__main__":
+    main()

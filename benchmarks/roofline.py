@@ -1,0 +1,81 @@
+"""Roofline report: aggregates results/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (per arch x shape x mesh: three terms,
+dominant bottleneck, MODEL_FLOPS ratio, roofline fraction)."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(results_dir=RESULTS):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.1f}"
+
+
+def table(recs, *, mesh="single", weights="dense", tag=""):
+    rows = []
+    hdr = (f"| arch | shape | compute ms | memory ms | collective ms | "
+           f"dominant | ideal ms | roofline frac | useful FLOP ratio |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for r in recs:
+        if r.get("skipped") or r.get("mesh") != mesh \
+                or r.get("weights") != weights or r.get("tag", "") != tag:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute_s'])} "
+            f"| {fmt_ms(r['t_memory_s'])} | {fmt_ms(r['t_collective_s'])} "
+            f"| {r['dominant']} | {fmt_ms(r['ideal_bound_s'])} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r.get('useful_flop_ratio', 0):.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("== roofline: no dry-run results yet "
+              "(run python -m repro.launch.dryrun) ==")
+        return
+    done = [r for r in recs if not r.get("skipped")]
+    skipped = [r for r in recs if r.get("skipped")]
+    print(f"== roofline: {len(done)} compiled cells, "
+          f"{len(skipped)} inapplicable ==")
+    print(table(recs, mesh="single"))
+    multi = [r for r in done if r.get("mesh") == "multi"]
+    if multi:
+        print(f"-- multi-pod (512 chips): {len(multi)} cells compiled OK --")
+    # fleet-optimized summary (EXPERIMENTS.md §Perf)
+    opt_dir = os.path.join(os.path.dirname(__file__), "..", "results", "opt")
+    opts = load(opt_dir)
+    if opts:
+        import math
+        base = {(r["arch"], r["shape"]): r for r in done
+                if r["mesh"] == "single" and not r.get("tag")}
+        best = {}
+        for r in opts:
+            if r.get("skipped"):
+                continue
+            k = (r["arch"], r["shape"])
+            if k not in best or r["bound_s"] < best[k]["bound_s"]:
+                best[k] = r
+        sp = [max(base[k]["bound_s"] / best[k]["bound_s"], 1.0)
+              for k in best if k in base]
+        if sp:
+            gm = math.exp(sum(math.log(x) for x in sp) / len(sp))
+            print(f"-- fleet-optimized ({len(sp)} cells, §Perf opt sets): "
+                  f"geomean bound speedup {gm:.2f}x over the dense "
+                  f"baseline --")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table2     # one table
+"""
+import sys
+import time
+
+from benchmarks import fig4, fig5, kernelbench, roofline, table1, table2, table4
+
+ALL = {
+    "table1": table1.main,     # precision profiling methodology, live
+    "table2": table2.main,     # FCL/CVL speedups vs paper
+    "table4": table4.main,     # all-layers, per-group weight precisions
+    "fig4": fig4.main,         # perf/eff per network
+    "fig5": fig5.main,         # scaling 32->512 equiv MACs
+    "kernelbench": kernelbench.main,  # bit-serial matmul laws
+    "roofline": roofline.main,        # dry-run roofline aggregation
+}
+
+
+def main():
+    names = sys.argv[1:] or list(ALL)
+    for name in names:
+        t0 = time.time()
+        print(f"\n##### {name} " + "#" * (60 - len(name)))
+        ALL[name]()
+        print(f"##### {name} done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""The paper's full precision pipeline on a TRANSFORMER (Tables 1+3 logic):
+
+1. Judd-style profiling per projection class (attn q/k/v/o, ffn up/gate/
+   down, lm_head) — the transformer analogue of per-layer profiles.
+2. A mixed-precision PrecisionPolicy from the profile.
+3. Offline bit-packed conversion at the profiled widths -> weight bytes
+   follow sum(Pw_i * size_i)/16 (the paper's storage law, now per class).
+4. Dynamic per-group activation trimming statistics (Lascorz et al.) on
+   live activations — the runtime savings Loom adds on top of the static
+   profile.
+
+Run:  PYTHONPATH=src python examples/precision_profiles.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import dynamic, policy as pol, profiler, quantize as q
+from repro.models import layers as L, model as M
+
+CLASSES = ("attn_q", "attn_k", "attn_v", "attn_o", "ffn_gate", "ffn_up",
+           "ffn_down", "lm_head")
+
+
+def main():
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    params, specs = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32)
+    ref, _ = M.forward_train(params, cfg, toks, L.ExecConfig(mode="dense"))
+    ref32 = ref.astype(jnp.float32)
+
+    def eval_fn(p):
+        lg, _ = M.forward_train(params, cfg, toks,
+                                L.ExecConfig(mode="fake_quant", policy=p))
+        err = jnp.linalg.norm(lg.astype(jnp.float32) - ref32) \
+            / jnp.linalg.norm(ref32)
+        return float(-err)
+
+    # -- 1. per-class weight-precision profile (the paper's Table 1 search)
+    prof_w = profiler.profile_layer_precisions(
+        eval_fn, CLASSES, tolerance=0.03, what="w_bits", min_bits=3)
+    prof_a = profiler.profile_layer_precisions(
+        eval_fn, CLASSES, tolerance=0.03, what="a_bits", min_bits=3)
+    print("[profile] per-class precisions (Pa/Pw):")
+    for c in CLASSES:
+        print(f"    {c:10s} {prof_a[c]:2d} / {prof_w[c]:2d}")
+
+    # -- 2+3. mixed-precision policy -> packed serving -------------------
+    # activations ride the int8 serving datapath -> cap Pa at 8
+    per_layer = {c: pol.LayerPrecision(a_bits=min(prof_a[c], 8),
+                                       w_bits=prof_w[c]) for c in CLASSES}
+    mixed = pol.PrecisionPolicy(default=pol.LayerPrecision(8, 8),
+                                per_layer=per_layer)
+    packed, _ = M.convert_params_for_serving(params, specs, mixed,
+                                             "serve_packed")
+    dense_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(params))
+    packed_bytes = sum(x.size * x.dtype.itemsize
+                       for x in jax.tree.leaves(packed))
+    lg_p, _ = M.forward_train(packed, cfg, toks,
+                              L.ExecConfig(mode="serve_packed", policy=mixed))
+    corr = np.corrcoef(np.asarray(ref, np.float32).ravel(),
+                       np.asarray(lg_p, np.float32).ravel())[0, 1]
+    print(f"[packed] mixed-precision weights: {packed_bytes/1e6:.3f}MB vs "
+          f"{dense_bytes/1e6:.3f}MB bf16 ({packed_bytes/dense_bytes:.2f}x); "
+          f"logit corr {corr:.4f}")
+    assert corr > 0.97
+
+    # -- 4. dynamic per-group trimming on live activations ----------------
+    h = L.embed_apply(params["embed"], toks).astype(jnp.float32)
+    flat = h.reshape(-1)
+    n = (flat.shape[0] // 256) * 256
+    xq, _ = q.quantize(flat[:n], 8)
+    stats = dynamic.dynamic_stats(xq.reshape(-1, 256), 8, 256)
+    print(f"[dynamic] embeddings: static 8b -> mean effective "
+          f"{float(stats['mean_effective_bits']):.2f}b "
+          f"(x{float(stats['plane_fraction_executed']):.2f} of the planes "
+          f"execute at runtime — Loom's dynamic trim)")
+    print("precision_profiles done.")
+
+
+if __name__ == "__main__":
+    main()

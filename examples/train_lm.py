@@ -1,0 +1,107 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on CPU, with the full production stack — sharded pjit step,
+optional QAT (the paper's profile-derived precisions via fake-quant),
+checkpointing, fault-tolerant supervisor, deterministic resumable data.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --small --steps 60
+      PYTHONPATH=src python examples/train_lm.py --steps 300   (~100M)
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.ckpt import CheckpointManager
+from repro.core.policy import uniform_policy
+from repro.data import DataConfig, synthetic_batch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import TrainConfig, jit_train_step, make_train_state
+from repro.models import layers as L, model as M
+from repro.models.transformer import LayerSpec, ModelConfig
+from repro.optim import AdamWConfig, Schedule
+from repro.runtime import Supervisor
+
+
+def model_100m(small: bool = False) -> ModelConfig:
+    if small:
+        return ModelConfig(
+            name="lm-10m", family="dense", n_layers=4, d_model=256,
+            vocab=4096, n_heads=4, n_kv_heads=2, d_head=64, d_ff=768,
+            qk_norm=True, pattern=(LayerSpec(),), max_seq=512, remat="none")
+    return ModelConfig(
+        name="lm-100m", family="dense", n_layers=12, d_model=768,
+        vocab=16384, n_heads=12, n_kv_heads=4, d_head=64, d_ff=2048,
+        qk_norm=True, pattern=(LayerSpec(),), max_seq=1024, remat="none")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--qat-bits", type=int, default=0,
+                    help="if set, train with fake-quant at this precision")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = model_100m(args.small)
+    structs = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg)[0])
+    n_params = sum(p.size for p in jax.tree.leaves(structs))
+    print(f"[train_lm] {cfg.name}: {n_params / 1e6:.1f}M params")
+
+    mode = "fake_quant" if args.qat_bits else "dense"
+    exec_cfg = L.ExecConfig(
+        mode=mode, policy=uniform_policy(args.qat_bits or 16,
+                                         args.qat_bits or 16))
+    tc = TrainConfig(opt=AdamWConfig(lr=3e-4),
+                     sched=Schedule(peak_lr=3e-4, warmup_steps=20,
+                                    total_steps=args.steps))
+    mesh = make_host_mesh()
+    state, sspecs = make_train_state(jax.random.PRNGKey(0), cfg, tc)
+    bspecs = {"tokens": PS("dp", None), "labels": PS("dp", None)}
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             f"loom_{cfg.name}")
+    mgr = CheckpointManager(ckpt_dir, every=100, keep_n=2)
+    losses = []
+
+    with jax.set_mesh(mesh):
+        step_fn = jit_train_step(cfg, exec_cfg, tc, mesh, sspecs, bspecs)
+
+        def one_step(st, idx):
+            b = {k: jnp.asarray(v)
+                 for k, v in synthetic_batch(dcfg, idx).items()}
+            st, metrics = step_fn(st, b)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if idx % 20 == 0:
+                print(f"  step {idx:4d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e}", flush=True)
+            return st, loss
+
+        sup = Supervisor(
+            step_fn=one_step,
+            save_fn=lambda s, st: mgr.save_async(s, st),
+            restore_fn=lambda: mgr.restore_latest(state, None),
+            save_every=100)
+        state, run = sup.train(state, args.steps)
+        mgr.wait()
+
+    first = sum(losses[:10]) / max(len(losses[:10]), 1)
+    last = sum(losses[-10:]) / max(len(losses[-10:]), 1)
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} over {len(losses)} "
+          f"steps (restarts={run.n_restarts}, spikes skipped="
+          f"{run.n_skipped_spikes})")
+    assert last < first, "training must reduce the loss"
+    print("train_lm done.")
+
+
+if __name__ == "__main__":
+    main()

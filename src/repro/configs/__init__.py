@@ -1,0 +1,44 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exposes ``config()`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family configuration for CPU tests).
+Select with --arch <id> in the launchers.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "mixtral_8x7b",
+    "deepseek_moe_16b",
+    "llama3_405b",
+    "qwen3_1_7b",
+    "gemma3_12b",
+    "nemotron_4_340b",
+    "mamba2_370m",
+    "musicgen_large",
+    "jamba_v0_1_52b",
+    "llama_3_2_vision_90b",
+    "paper_cnn",
+)
+
+_ALIASES = {
+    "mixtral-8x7b": "mixtral_8x7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "llama3-405b": "llama3_405b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "gemma3-12b": "gemma3_12b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "mamba2-370m": "mamba2_370m",
+    "musicgen-large": "musicgen_large",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+}
+
+LM_ARCHS = tuple(a for a in ARCHS if a != "paper_cnn")
+
+
+def get(name: str, smoke: bool = False):
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.smoke_config() if smoke else mod.config()

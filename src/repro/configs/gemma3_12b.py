@@ -1,0 +1,32 @@
+"""gemma3-12b [dense]: 48L d3840 16H (GQA kv=8) d_head=256 d_ff=15360
+vocab=262144, 5:1 local(sliding-window 1024):global pattern, 128k context.
+[hf:google/gemma-3-12b-pt]
+
+Sub-quadratic eligibility for long_500k: 5/6 of layers are 1024-window SWA
+(ring caches, O(w) decode reads); the 1/6 global layers are full-attention
+but decode-linear (one query against the cache). Included in long_500k
+with this note (DESIGN.md §Arch-applicability)."""
+from repro.models.transformer import LayerSpec, ModelConfig
+
+LOCAL_WINDOW = 1024
+
+
+def config() -> ModelConfig:
+    pattern = tuple(LayerSpec(window=LOCAL_WINDOW) for _ in range(5)) + (
+        LayerSpec(window=None),)
+    return ModelConfig(
+        name="gemma3-12b", family="dense",
+        n_layers=48, d_model=3840, vocab=262144,
+        n_heads=16, n_kv_heads=8, d_head=256, d_ff=15360,
+        qk_norm=True, rope_theta=1e6, pattern=pattern,
+        sub_quadratic=True, max_seq=524288)
+
+
+def smoke_config() -> ModelConfig:
+    pattern = (LayerSpec(window=16), LayerSpec(window=None))
+    return ModelConfig(
+        name="gemma3-smoke", family="dense",
+        n_layers=2, d_model=64, vocab=256,
+        n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+        qk_norm=True, pattern=pattern, sub_quadratic=True,
+        max_seq=128, remat="none")

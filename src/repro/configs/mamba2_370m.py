@@ -1,0 +1,31 @@
+"""mamba2-370m [ssm]: 48L d1024 attention-free, vocab=50280,
+ssm_state=128, SSD (state-space duality). [arXiv:2405.21060]
+
+Mamba blocks only (no FFN blocks, as in the release). Loom applies to the
+in/out projections; the state recurrence stays fp32 (DESIGN.md
+§Arch-applicability). Sub-quadratic: long_500k runs (O(1) decode state)."""
+from repro.models.ssm import SSMConfig
+from repro.models.transformer import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    # vocab padded 50280 -> 50304 (= 16*3144) so the embedding/head tables
+    # shard on the 16-way axes; padded ids are never emitted by the data
+    # pipeline (standard practice, e.g. GPT-NeoX pads its 50277 tokenizer).
+    return ModelConfig(
+        name="mamba2-370m", family="ssm",
+        n_layers=48, d_model=1024, vocab=50304,
+        pattern=(LayerSpec(kind="mamba", ffn="none"),),
+        ssm=SSMConfig(d_model=1024, d_state=128, d_conv=4, expand=2,
+                      head_dim=64),
+        sub_quadratic=True, max_seq=524288)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm",
+        n_layers=2, d_model=64, vocab=256,
+        pattern=(LayerSpec(kind="mamba", ffn="none"),),
+        ssm=SSMConfig(d_model=64, d_state=16, d_conv=4, expand=2,
+                      head_dim=16, chunk=16),
+        sub_quadratic=True, max_seq=128, remat="none")

@@ -1,0 +1,15 @@
+"""The paper's own model family: a CNN with convolutional + fully-connected
+layers, scaled to run live on this container (CIFAR-size). Used by the
+Table-1 benchmark (live precision profiling) and the quickstart example.
+The full-size paper networks (AlexNet/VGG/NiN/GoogLeNet) are modeled by
+repro.core.cyclemodel for Tables 2-4."""
+from repro.models.cnn import CNNConfig
+
+
+def config() -> CNNConfig:
+    return CNNConfig()
+
+
+def smoke_config() -> CNNConfig:
+    return CNNConfig(name="paper-cnn-smoke", img=16,
+                     convs=(CNNConfig().convs[0],), fcs=(32, 10))

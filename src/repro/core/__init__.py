@@ -1,0 +1,22 @@
+"""Loom core: precision-scaled execution engine (the paper's contribution).
+
+Public API:
+    quantize      fixed-point quantization + 2's-complement bit planes
+    bitpack       bit-interleaved packed storage (memory ∝ P/16)
+    engine        plane-serial matmul (LM_1b..LM_8b), split-K cascading
+    dynamic       runtime per-group precision reduction
+    policy        per-layer precision policies + paper Tables 1/3 data
+    profiler      Judd-style per-layer precision search
+    cyclemodel    DPNN/Stripes/Loom cycle model (paper Tables 2/4, Figs 4/5)
+"""
+from repro.core import bitpack, cyclemodel, dynamic, engine, policy, profiler, quantize
+from repro.core.engine import LoomConfig, loom_matmul, plane_matmul
+from repro.core.policy import LayerPrecision, PrecisionPolicy, uniform_policy
+from repro.core.quantize import dequantize, fake_quant
+
+__all__ = [
+    "bitpack", "cyclemodel", "dynamic", "engine", "policy", "profiler",
+    "quantize", "LoomConfig", "loom_matmul", "plane_matmul",
+    "LayerPrecision", "PrecisionPolicy", "uniform_policy",
+    "dequantize", "fake_quant",
+]

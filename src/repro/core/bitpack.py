@@ -1,0 +1,83 @@
+"""Bit-interleaved packed storage — Loom's memory-side contribution.
+
+The paper stores weights/activations as bit planes, "first their bit 0 onto
+continuous rows, then their bit 1, and so on", using only as many planes as
+the profile-derived precision. Memory footprint and bandwidth then scale as
+P/16 versus the 16-bit bit-parallel baseline.
+
+On TPU the analogous layout packs each bit plane along the reduction (K)
+dimension, 8 positions per uint8 (or 32 per uint32), yielding a
+``[n_planes, K/8, N]`` uint8 tensor. HBM reads then move exactly
+``P/16 * (K*N*2)`` bytes per weight matrix — the paper's scaling — and the
+Pallas kernel (kernels/bitserial_matmul.py) unpacks planes in VMEM.
+
+The ``transpose``-and-pack of output activations (the paper's "transposer"
+before writing ABout to AM) is `pack_planes` applied on the fly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as q
+
+
+def pack_bits_along_axis(bits01: jax.Array, axis: int) -> jax.Array:
+    """Pack a {0,1}-valued array 8-per-uint8 along ``axis``.
+
+    The axis length must be a multiple of 8. Bit i of byte j holds element
+    8*j + i (little-endian within the byte).
+    """
+    axis = axis % bits01.ndim
+    n = bits01.shape[axis]
+    assert n % 8 == 0, f"pack axis length {n} not a multiple of 8"
+    shape = list(bits01.shape)
+    shape[axis:axis + 1] = [n // 8, 8]
+    grouped = bits01.astype(jnp.uint8).reshape(shape)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint8))
+    bshape = [1] * grouped.ndim
+    bshape[axis + 1] = 8
+    return jnp.sum(grouped * weights.reshape(bshape), axis=axis + 1).astype(jnp.uint8)
+
+
+def unpack_bits_along_axis(packed: jax.Array, axis: int) -> jax.Array:
+    """Inverse of pack_bits_along_axis: uint8 -> {0,1} with 8x axis length."""
+    axis = axis % packed.ndim
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bshape = [1] * (packed.ndim + 1)
+    bshape[axis + 1] = 8
+    bits = jnp.bitwise_and(
+        jnp.right_shift(jnp.expand_dims(packed, axis + 1), shifts.reshape(bshape)), 1)
+    shape = list(packed.shape)
+    shape[axis] = shape[axis] * 8
+    return bits.reshape(shape).astype(jnp.uint8)
+
+
+def pack_weights(wq: jax.Array, bits: int) -> jax.Array:
+    """Bit-interleave a quantized weight matrix.
+
+    wq: int32 [K, N] signed 2's-complement values of ``bits`` precision.
+    Returns uint8 [bits, K//8, N]: plane-major (the paper's interleave),
+    packed 8 K-positions per byte. Total bytes = bits/16 of the 16-bit
+    baseline footprint (K*N*2).
+    """
+    planes = q.bit_planes(wq, bits)            # [bits, K, N] in {0,1}
+    return pack_bits_along_axis(planes, axis=1)  # [bits, K//8, N]
+
+
+def unpack_weights(packed: jax.Array, bits: int) -> jax.Array:
+    """Reconstruct signed int32 [K, N] from the packed plane representation."""
+    planes = unpack_bits_along_axis(packed, axis=1).astype(jnp.int64)  # [bits,K,N]
+    w = q.plane_weights(bits).reshape((bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes * w, axis=0).astype(jnp.int32)
+
+
+def packed_nbytes(shape_kn: tuple[int, int], bits: int) -> int:
+    """Bytes used by the packed representation (the paper's footprint claim)."""
+    k, n = shape_kn
+    return bits * (k // 8) * n
+
+
+def baseline_nbytes(shape_kn: tuple[int, int], base_bits: int = 16) -> int:
+    k, n = shape_kn
+    return k * n * (base_bits // 8)

@@ -1,0 +1,59 @@
+"""Dynamic precision reduction (Lascorz et al.), as used by Loom.
+
+Per group of ``group_size`` concurrently-processed activations, OR-trees
+produce a bit-position occupancy vector and a leading-one detector finds the
+minimum sufficient precision. Loom then executes only that many activation
+bit planes for the group, trimming below the static per-layer profile.
+
+Here the same computation yields, per group: the effective precision (used
+by the Pallas kernel's scalar-prefetch plane counts and by the cycle model),
+and the quantized values. The JAX/XLA path computes all profile planes and
+masks — numerically identical, with the savings accounted analytically;
+the TPU kernel actually skips the reads (see kernels/bitserial_matmul.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as q
+
+
+def group_effective_bits(xq: jax.Array, group_size: int) -> jax.Array:
+    """Effective signed precision per group along the last axis.
+
+    xq: int32 [..., K] quantized activations. Returns int32 [..., K/group]
+    with the per-group minimum sufficient precision (sign included) — the
+    OR-tree + leading-one-detector of the paper.
+    """
+    *lead, k = xq.shape
+    assert k % group_size == 0, (k, group_size)
+    g = xq.reshape(*lead, k // group_size, group_size)
+    # OR of |values| across the group ~ leading-one position of the max.
+    return q.effective_bits(g, axis=-1)
+
+
+def dynamic_stats(xq: jax.Array, static_bits: int, group_size: int) -> dict:
+    """Report the savings dynamic precision reduction achieves vs the static
+    profile — the quantity that drives Loom's runtime speedup contribution."""
+    eff = group_effective_bits(xq, group_size)
+    eff = jnp.minimum(eff, static_bits)
+    return {
+        "mean_effective_bits": jnp.mean(eff.astype(jnp.float32)),
+        "static_bits": static_bits,
+        "plane_fraction_executed": jnp.mean(eff.astype(jnp.float32)) / static_bits,
+    }
+
+
+def trim_to_group_bits(xq: jax.Array, group_size: int, max_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Clamp each group to its effective precision (identity on values — by
+    construction every value fits in its group's effective bits) and return
+    (xq, per-group plane counts) for the serial engine."""
+    eff = jnp.minimum(group_effective_bits(xq, group_size), max_bits)
+    return xq, eff
+
+
+def expected_speedup(eff_bits: jax.Array, static_bits: int) -> jax.Array:
+    """Cycle-model speedup of dynamic trimming for a serial-activation layer:
+    planes executed shrink from static_bits to E[eff]."""
+    return static_bits / jnp.mean(eff_bits.astype(jnp.float32))

@@ -1,0 +1,138 @@
+"""Loom plane-serial matmul engine (the SIP array, TPU-adapted).
+
+``loom_matmul`` computes Y = Xq @ Wq exactly (integer-exact) by decomposing
+both operands into planes of ``a_plane_bits`` / ``w_plane_bits`` bits and
+accumulating shifted partial matmuls:
+
+    Y = sum_i sum_j  s_i * t_j * 2^(ba*i + bw*j) * (X_i @ W_j)
+
+where X_i, W_j are the i-th/j-th planes and the top planes carry the sign
+(the paper's MSB negation block, at plane granularity). The number of
+partial matmuls is ceil(Pa/ba) * ceil(Pw/bw) — work scales inversely with
+precision exactly as Loom's CVL law 256/(Pa*Pw) when ba = bw = 1 and the
+baseline is 16x16 planes.
+
+Plane widths map to the paper's variants:
+    ba = bw = 1  -> LM_1b      (max speedup)
+    2            -> LM_2b      (paper: most energy-efficient ASIC point)
+    4            -> LM_4b
+    8            -> LM_8b      (TPU production default: int8 MXU passes)
+
+The FCL mode of the paper (weights serial, activations bit-parallel) is
+``a_plane_bits=Pa`` (single activation plane): work scales 16/Pw.
+
+Everything here is the XLA path, numerically identical to
+kernels/bitserial_matmul.py (the Pallas TPU kernel) and used for the
+multi-pod dry-run; LoomLinear dispatches between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as q
+
+
+@dataclasses.dataclass(frozen=True)
+class LoomConfig:
+    """Configuration of the plane-serial engine for one linear layer."""
+
+    a_bits: int = 8            # Pa: activation precision
+    w_bits: int = 8            # Pw: weight precision
+    a_plane_bits: int = 8      # ba: activation bits processed per pass
+    w_plane_bits: int = 8      # bw: weight bits processed per pass
+    dynamic_a: bool = False    # runtime per-group activation precision trim
+    group_size: int = 256      # paper: group of 256 concurrent activations
+    mode: Literal["serial_both", "serial_weights"] = "serial_both"
+    # serial_both  == CVL law  256/(Pa*Pw)
+    # serial_weights == FCL law 16/Pw (activations consumed bit-parallel)
+
+    @property
+    def n_a_planes(self) -> int:
+        if self.mode == "serial_weights":
+            return 1
+        return -(-self.a_bits // self.a_plane_bits)
+
+    @property
+    def n_w_planes(self) -> int:
+        return -(-self.w_bits // self.w_plane_bits)
+
+    def speedup_vs_base(self, base_bits: int = 16) -> float:
+        """Ideal Loom speedup law for this config (paper Sec. 2)."""
+        if self.mode == "serial_weights":
+            return base_bits / (self.n_w_planes * self.w_plane_bits)
+        return (base_bits * base_bits) / (
+            (self.n_a_planes * self.a_plane_bits) * (self.n_w_planes * self.w_plane_bits))
+
+
+def plane_matmul(xq: jax.Array, wq: jax.Array, cfg: LoomConfig,
+                 acc_dtype=jnp.int32) -> jax.Array:
+    """Integer-exact plane-serial matmul of quantized operands.
+
+    xq: int32 [..., K] in signed a_bits range; wq: int32 [K, N] in w_bits
+    range. Returns int32 [..., N] == xq @ wq exactly.
+    """
+    if cfg.mode == "serial_weights":
+        a_planes = xq[None].astype(jnp.int32)
+        a_scales = jnp.ones((1,), dtype=jnp.int32)
+    else:
+        a_planes, a_scales = q.group_planes(xq, cfg.a_bits, cfg.a_plane_bits)
+    w_planes, w_scales = q.group_planes(wq, cfg.w_bits, cfg.w_plane_bits)
+
+    # The serial loop: one partial matmul per (activation plane, weight plane)
+    # pair — this is the SIP array's P_a x P_w cycle schedule. On TPU each
+    # pass is an MXU matmul over narrow integers.
+    def body(carry, ij):
+        i, j = ij
+        part = jnp.matmul(a_planes[i].astype(acc_dtype), w_planes[j].astype(acc_dtype),
+                          preferred_element_type=acc_dtype)
+        shift = (a_scales[i] * w_scales[j]).astype(acc_dtype)
+        return carry + part * shift, None
+
+    na, nw = a_planes.shape[0], w_planes.shape[0]
+    ii, jj = jnp.meshgrid(jnp.arange(na), jnp.arange(nw), indexing="ij")
+    pairs = (ii.reshape(-1), jj.reshape(-1))
+    out_shape = xq.shape[:-1] + (wq.shape[-1],)
+    init = jnp.zeros(out_shape, dtype=acc_dtype)
+    out, _ = jax.lax.scan(body, init, pairs)
+    return out
+
+
+def loom_matmul(x: jax.Array, w: jax.Array, cfg: LoomConfig,
+                w_scale: jax.Array | None = None,
+                wq: jax.Array | None = None) -> jax.Array:
+    """Quantize -> plane-serial matmul -> dequantize. Returns float32/bfloat16.
+
+    If (wq, w_scale) are provided the weights are already on the integer grid
+    (serving path: weights quantized once, stored bit-packed). Otherwise both
+    operands are quantized on the fly (QAT-style forward).
+    """
+    xq, x_scale = q.quantize(x, cfg.a_bits)
+    if wq is None:
+        wq, w_scale = q.quantize(w, cfg.w_bits)
+    yq = plane_matmul(xq, wq, cfg)
+    return (yq.astype(jnp.float32) * (x_scale * w_scale)).astype(x.dtype)
+
+
+def reference_int_matmul(xq: jax.Array, wq: jax.Array) -> jax.Array:
+    """Oracle: direct integer matmul of the quantized operands."""
+    return jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+def split_k_matmul(xq: jax.Array, wq: jax.Array, cfg: LoomConfig,
+                   n_slices: int) -> jax.Array:
+    """SIP cascading, TPU-adapted: slice the reduction dim into ``n_slices``
+    partial inner products computed independently then reduced — the paper's
+    answer to layers with fewer outputs than SIP lanes (split-K matmul)."""
+    k = xq.shape[-1]
+    assert k % n_slices == 0, (k, n_slices)
+    ks = k // n_slices
+    parts = []
+    for s in range(n_slices):
+        parts.append(plane_matmul(xq[..., s * ks:(s + 1) * ks],
+                                  wq[s * ks:(s + 1) * ks], cfg))
+    return jnp.sum(jnp.stack(parts), axis=0)

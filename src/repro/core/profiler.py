@@ -1,0 +1,64 @@
+"""Per-layer precision profiling — the method of Judd et al. [6].
+
+Given a model apply-fn, calibration batch, and an accuracy (or loss) metric,
+find for each layer the minimum activation/weight precision that keeps the
+metric within a relative tolerance of the full-precision result. This
+produces Table-1-style profiles for any model in the framework, and the
+dynamic-precision statistics (Lascorz et al.) measured on live activations.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dynamic, policy, quantize as q
+
+
+def profile_layer_precisions(
+    eval_fn: Callable[[policy.PrecisionPolicy], float],
+    layer_names: Sequence[str],
+    *,
+    tolerance: float = 0.0,
+    min_bits: int = 2,
+    max_bits: int = 16,
+    what: str = "a_bits",
+) -> dict:
+    """One-layer-at-a-time descending search (as in Judd et al.): for each
+    layer, lower its precision until the metric degrades beyond tolerance
+    relative to the 16-bit baseline, holding other layers at 16 bits.
+
+    eval_fn(policy) -> metric (higher is better, e.g. accuracy or -loss).
+    Returns {layer_name: min_bits_ok}.
+    """
+    base = eval_fn(policy.uniform_policy(16, 16))
+    floor = base * (1.0 - tolerance) if base >= 0 else base * (1.0 + tolerance)
+    result = {}
+    for name in layer_names:
+        ok = max_bits
+        for bits in range(max_bits - 1, min_bits - 1, -1):
+            lp = {name: policy.LayerPrecision(
+                a_bits=bits if what == "a_bits" else 16,
+                w_bits=bits if what == "w_bits" else 16)}
+            pol = policy.PrecisionPolicy(default=policy.LayerPrecision(16, 16),
+                                         per_layer=lp)
+            if eval_fn(pol) >= floor:
+                ok = bits
+            else:
+                break
+        result[name] = ok
+    return result
+
+
+def measure_dynamic_precision(x: jax.Array, static_bits: int,
+                              group_size: int = 256) -> dict:
+    """Measure the live per-group effective precision of an activation tensor
+    (what Loom's OR-tree + leading-one detector would see at runtime)."""
+    xq, _ = q.quantize(x, static_bits)
+    flat = xq.reshape(-1)
+    pad = (-flat.shape[0]) % group_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return {k: float(v) for k, v in
+            dynamic.dynamic_stats(flat, static_bits, group_size).items()}

@@ -1,0 +1,158 @@
+"""Fixed-point quantization with 2's-complement bit-plane decomposition.
+
+This is Loom's numeric substrate. The paper uses 16-bit fixed-point as the
+baseline representation and per-layer profile-derived precisions Pa (input
+activations) and Pw (weights). A P-bit signed 2's-complement value x_q obeys
+
+    x_q = -2^(P-1) * b_{P-1} + sum_{p=0}^{P-2} 2^p * b_p
+
+which is exactly what Loom's SIP implements with its MSB "negation block".
+All plane decompositions here follow that convention so the plane-serial
+matmul in `repro.core.engine` is bit-identical to an integer matmul of the
+quantized operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+MAX_BITS = 16  # the paper's bit-parallel baseline precision (DPNN)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Symmetric fixed-point quantization parameters.
+
+    ``scale`` maps the integer grid back to reals: x ~= x_q * scale.
+    ``bits`` is the total signed precision P (including sign bit).
+    """
+
+    bits: int
+    scale: jax.Array  # per-tensor or per-channel scale, broadcastable
+
+
+def qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def qmin(bits: int) -> int:
+    return -(1 << (bits - 1))
+
+
+def compute_scale(x: jax.Array, bits: int, axis=None, keepdims: bool = True) -> jax.Array:
+    """Symmetric absmax scale so that max|x| maps to qmax(bits)."""
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    absmax = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny)
+    return (absmax / qmax(bits)).astype(jnp.float32)
+
+
+def quantize(x: jax.Array, bits: int, scale: jax.Array | None = None,
+             axis=None) -> tuple[jax.Array, jax.Array]:
+    """Quantize to signed ``bits``-bit integers (stored as int32).
+
+    Returns (x_q, scale). Symmetric, round-to-nearest-even, clipped to the
+    signed range, matching the paper's fixed-point conversion.
+    """
+    if scale is None:
+        scale = compute_scale(x, bits, axis=axis)
+    xq = jnp.clip(jnp.round(x / scale), qmin(bits), qmax(bits)).astype(jnp.int32)
+    return xq, scale
+
+
+def dequantize(xq: jax.Array, scale: jax.Array) -> jax.Array:
+    return xq.astype(jnp.float32) * scale
+
+
+def to_twos_complement(xq: jax.Array, bits: int) -> jax.Array:
+    """Map signed ints to their unsigned 2's-complement bit pattern (P bits)."""
+    mask = (1 << bits) - 1
+    return jnp.bitwise_and(xq, mask)
+
+
+def bit_planes(xq: jax.Array, bits: int) -> jax.Array:
+    """Decompose signed ints into ``bits`` 2's-complement bit planes.
+
+    Returns uint8 array of shape (bits,) + xq.shape with values in {0, 1};
+    plane p holds bit p. Reconstruction uses plane_weights(bits):
+        xq == sum_p plane_weights[p] * planes[p]
+    with plane_weights[bits-1] == -2^(bits-1)  (the SIP negation block).
+    """
+    tc = to_twos_complement(xq, bits)
+    shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * xq.ndim)
+    return jnp.bitwise_and(jnp.right_shift(tc[None], shifts), 1).astype(jnp.uint8)
+
+
+def plane_weights(bits: int) -> jnp.ndarray:
+    """Signed weight of each 2's-complement bit plane (int32: P<=16 fits)."""
+    w = jnp.power(2, jnp.arange(bits, dtype=jnp.int32)).astype(jnp.int32)
+    return w.at[bits - 1].multiply(-1)
+
+
+def group_planes(xq: jax.Array, bits: int, plane_width: int) -> tuple[jax.Array, jax.Array]:
+    """Decompose into ceil(bits/plane_width) planes of ``plane_width`` bits.
+
+    This is the LM_{2b,4b,8b} generalization: each plane is a small signed
+    integer in [-(2^(w-1))... for the MSB plane, else [0, 2^w - 1]. Returns
+    (planes int8/int32 array of shape (n_planes,)+xq.shape, signed weights of
+    shape (n_planes,)). Reconstruction: xq == sum_p weights[p] * planes[p].
+
+    Plane values: the top plane is interpreted as signed (2's complement of
+    its own width extended), all lower planes as unsigned — this mirrors the
+    MSB-negation trick at plane granularity.
+    """
+    n_planes = -(-bits // plane_width)
+    padded_bits = n_planes * plane_width
+    tc = to_twos_complement(xq, bits)
+    # Sign-extend to padded_bits so the top plane carries the sign.
+    sign = jnp.right_shift(tc, bits - 1) & 1
+    ext_mask = ((1 << padded_bits) - 1) ^ ((1 << bits) - 1)
+    tc = jnp.where(sign == 1, jnp.bitwise_or(tc, ext_mask), tc)
+
+    shifts = (jnp.arange(n_planes, dtype=jnp.int32) * plane_width)
+    shifts = shifts.reshape((n_planes,) + (1,) * xq.ndim)
+    planes = jnp.bitwise_and(jnp.right_shift(tc[None], shifts), (1 << plane_width) - 1)
+    # Top plane: reinterpret as signed plane_width-bit value.
+    top = planes[n_planes - 1]
+    top = jnp.where(top >= (1 << (plane_width - 1)), top - (1 << plane_width), top)
+    planes = planes.at[n_planes - 1].set(top)
+    weights = jnp.power(2, (jnp.arange(n_planes, dtype=jnp.int32) * plane_width))
+    return planes.astype(jnp.int32), weights.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator (QAT) — training-side integration of the paper's
+# precision profiles: forward uses the quantized grid, backward is identity.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, bits: int) -> jax.Array:
+    xq, scale = quantize(x, bits)
+    return dequantize(xq, scale).astype(x.dtype)
+
+
+def _fq_fwd(x, bits):
+    return fake_quant(x, bits), None
+
+
+def _fq_bwd(bits, _, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def effective_bits(xq: jax.Array, axis=None, keepdims: bool = False) -> jax.Array:
+    """Per-group effective precision: bits needed for max|group| + sign.
+
+    This is the paper's dynamic precision reduction (Lascorz et al.): OR-trees
+    across the group find the leading one; we compute it as
+    ceil(log2(max|x|+1)) + 1 (sign bit). Zero groups need 1 bit.
+    """
+    m = jnp.max(jnp.abs(xq), axis=axis, keepdims=keepdims)
+    # bit length of m: number of bits to represent magnitude.
+    nbits = jnp.ceil(jnp.log2(m.astype(jnp.float32) + 1.0)).astype(jnp.int32)
+    # Exact for powers of two boundary: log2(2^k - 1 + 1) = k. Add sign bit.
+    return jnp.maximum(nbits + 1, 1)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, synthetic_batch, make_iterator,
+                                 host_shard_batch)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True) + XLA refs.
+
+    bitserial_matmul   the SIP array: packed-plane serial matmul (+dynamic)
+    dynamic_quant      per-group quantize + leading-one precision detect
+    flash_attention    chunked online-softmax attention (32k prefill)
+    ops                jit'd dispatch wrappers (Pallas on TPU, XLA oracle off)
+    ref                pure-jnp oracles, the specification for every kernel
+"""

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: bit-serial (plane-serial) matmul over packed weights.
+
+This is the SIP array adapted to the TPU memory hierarchy:
+
+  * Weights live in HBM **bit-packed**: uint8 [Pw, K/8, N] — plane-major,
+    8 reduction positions per byte (repro.core.bitpack layout). HBM traffic
+    is Pw/16 of the bf16 baseline — the paper's bandwidth law.
+  * Each grid step stages one (bk x bn) tile of ONE plane into VMEM,
+    unpacks it to {0,1} int8 in-register, and feeds the MXU with an
+    int8 x int8 -> int32 matmul against the activation tile: the TPU
+    equivalent of a SIP column's AND + adder-tree, at MXU rate.
+  * The serial plane loop is the innermost grid dimension; partial products
+    are shifted by 2^p and accumulated in the output tile, with the MSB
+    plane negated (2's complement — the paper's negation block).
+  * Dynamic precision reduction: an optional scalar-prefetch plane-count
+    lets the kernel skip planes above the runtime effective precision
+    (Lascorz et al.) — blocks with plane >= count are masked via pl.when
+    so no MXU work (and on TPU no HBM fetch of that plane's tile) happens.
+
+Activations are int8 (Pa <= 8 after quantization). This realizes the
+paper's FCL law (work, bytes ∝ Pw) and, combined with 4-bit activation
+packing upstream, the CVL law at plane granularity. Block shapes default to
+MXU-aligned (multiples of 128 on M/N, 8*128 on packed K).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_plane(packed_tile: jax.Array) -> jax.Array:
+    """uint8 [bk8, bn] -> {0,1} int8 [bk8*8, bn] (little-endian in byte)."""
+    bk8, bn = packed_tile.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    bits = jnp.right_shift(packed_tile[:, None, :], shifts) & jnp.uint8(1)
+    return bits.reshape(bk8 * 8, bn).astype(jnp.int8)
+
+
+def _kernel(x_ref, wp_ref, out_ref, acc_ref, *, w_bits: int, nk: int):
+    """Grid = (M/bm, N/bn, K/bk, Pw). Serial plane axis innermost."""
+    k = pl.program_id(2)
+    p = pl.program_id(3)
+
+    @pl.when((k == 0) & (p == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    plane = _unpack_plane(wp_ref[0])                     # [bk, bn] {0,1}
+    part = jax.lax.dot_general(
+        x_ref[...], plane,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)                # MXU int8 pass
+    sign = jnp.where(p == w_bits - 1, -1, 1)             # MSB negation
+    acc_ref[...] += part * (sign * (1 << p))
+
+    @pl.when((k == nk - 1) & (p == w_bits - 1))
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits", "bm", "bn", "bk", "interpret"))
+def bitserial_matmul(x: jax.Array, w_packed: jax.Array, *, w_bits: int,
+                     bm: int = 128, bn: int = 128, bk: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """x: int8 [M, K]; w_packed: uint8 [Pw, K//8, N] -> int32 [M, N].
+
+    Integer-exact: result == x.astype(i32) @ unpack(w_packed).astype(i32).
+    interpret=True executes on CPU (validation); on TPU pass False.
+    """
+    m, k = x.shape
+    pw, k8, n = w_packed.shape
+    assert pw == w_bits and k8 * 8 == k, (w_packed.shape, x.shape, w_bits)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % 8 == 0
+    nk = k // bk
+
+    grid = (m // bm, n // bn, nk, w_bits)
+    return pl.pallas_call(
+        functools.partial(_kernel, w_bits=w_bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, p: (i, kk)),
+            pl.BlockSpec((1, bk // 8, bn), lambda i, j, kk, p: (p, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, p: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x, w_packed)
+
+
+def _kernel_dyn(counts_ref, x_ref, wp_ref, out_ref, acc_ref, *,
+                w_bits: int, nk: int):
+    """Dynamic-precision variant: counts_ref (scalar prefetch) holds the
+    runtime effective weight precision per N-tile (per-group metadata of the
+    paper Sec 4.6); planes >= count are skipped entirely."""
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+    p = pl.program_id(3)
+
+    @pl.when((kk == 0) & (p == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    count = counts_ref[j]
+
+    @pl.when(p < count)
+    def _work():
+        plane = _unpack_plane(wp_ref[0])
+        part = jax.lax.dot_general(
+            x_ref[...], plane,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        sign = jnp.where(p == count - 1, -1, 1)
+        acc_ref[...] += part * (sign * (1 << p))
+
+    @pl.when((kk == nk - 1) & (p == w_bits - 1))
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits", "bm", "bn", "bk", "interpret"))
+def bitserial_matmul_dynamic(x: jax.Array, w_packed: jax.Array,
+                             plane_counts: jax.Array, *, w_bits: int,
+                             bm: int = 128, bn: int = 128, bk: int = 512,
+                             interpret: bool = True) -> jax.Array:
+    """Like bitserial_matmul but executes only plane_counts[j] planes for
+    N-tile j. Weights must be stored group-quantized so that tile j's values
+    fit in plane_counts[j] bits (2's complement within that width)."""
+    m, k = x.shape
+    pw, k8, n = w_packed.shape
+    assert pw == w_bits and k8 * 8 == k
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % 8 == 0
+    nk = k // bk
+    assert plane_counts.shape == (n // bn,)
+
+    grid = (m // bm, n // bn, nk, w_bits)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, p, counts: (i, kk)),
+            pl.BlockSpec((1, bk // 8, bn), lambda i, j, kk, p, counts: (p, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, p, counts: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_dyn, w_bits=w_bits, nk=nk),
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(plane_counts, x, w_packed)

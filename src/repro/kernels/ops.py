@@ -1,0 +1,60 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+``use_pallas`` selects between the Mosaic kernel (TPU) and the bit-identical
+XLA reference path (CPU dry-run / fallback). Model code calls only these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack, engine, quantize as q
+from repro.kernels import ref
+from repro.kernels.bitserial_matmul import bitserial_matmul, bitserial_matmul_dynamic
+from repro.kernels.dynamic_quant import dynamic_quant
+from repro.kernels.flash_attention import flash_attention
+
+
+def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
+                      *, a_bits: int, w_bits: int,
+                      use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    """Serving-path linear: activations dynamically quantized to a_bits,
+    weights pre-packed bit-serially. Output in x.dtype.
+
+    x: [..., K]; w_packed: uint8 [Pw, K//8, N]; w_scale: per-tensor f32.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    xq, x_scale = q.quantize(x2, a_bits)
+    if use_pallas:
+        y = bitserial_matmul(xq.astype(jnp.int8), w_packed, w_bits=w_bits,
+                             interpret=interpret)
+    else:
+        y = ref.bitserial_matmul_ref(xq.astype(jnp.int8), w_packed, w_bits)
+    out = y.astype(jnp.float32) * (x_scale * w_scale)
+    return out.reshape(*lead, -1).astype(x.dtype)
+
+
+def quantize_activations(x: jax.Array, *, group_size: int = 256, bits: int = 8,
+                         use_pallas: bool = False, interpret: bool = True):
+    """Dynamic per-group activation quantization (Loom's runtime path)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if use_pallas:
+        xq, scale, eff = dynamic_quant(x2, group_size=group_size, bits=bits,
+                                       interpret=interpret)
+    else:
+        xq, scale, eff = ref.dynamic_quant_ref(x2, group_size, bits)
+    return (xq.reshape(*lead, -1), scale.reshape(*lead, -1),
+            eff.reshape(*lead, -1))
+
+
+def attention(q_: jax.Array, k_: jax.Array, v_: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    """Full-sequence attention ([B,H,S,D], KV already head-repeated)."""
+    if use_pallas:
+        return flash_attention(q_, k_, v_, causal=causal, window=window,
+                               interpret=interpret)
+    return ref.flash_attention_ref(q_, k_, v_, causal=causal, window=window)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification its kernel must match
+bit-exactly (integer kernels) or to float tolerance (attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+
+
+def bitserial_matmul_ref(x: jax.Array, w_packed: jax.Array, w_bits: int) -> jax.Array:
+    """int8 [M,K] @ packed uint8 [Pw,K//8,N] -> exact int32 [M,N]."""
+    wq = bitpack.unpack_weights(w_packed, w_bits)  # int32 [K, N]
+    return jnp.matmul(x.astype(jnp.int32), wq, preferred_element_type=jnp.int32)
+
+
+def bitserial_matmul_dynamic_ref(x: jax.Array, w_packed: jax.Array,
+                                 plane_counts: jax.Array, w_bits: int,
+                                 bn: int) -> jax.Array:
+    """Oracle for the dynamic-precision kernel: N-tile j only uses its first
+    plane_counts[j] planes, with the (count-1)-th plane negated (2's
+    complement at the effective width)."""
+    planes = bitpack.unpack_bits_along_axis(w_packed, axis=1).astype(jnp.int32)
+    k, n = planes.shape[1], planes.shape[2]
+    p_idx = jnp.arange(w_bits).reshape(-1, 1, 1)
+    counts = jnp.repeat(plane_counts, bn).reshape(1, 1, n)
+    sign = jnp.where(p_idx == counts - 1, -1, 1)
+    active = (p_idx < counts).astype(jnp.int32)
+    w_eff = jnp.sum(planes * active * sign * (1 << p_idx.astype(jnp.int32)), axis=0)
+    return jnp.matmul(x.astype(jnp.int32), w_eff, preferred_element_type=jnp.int32)
+
+
+def dynamic_quant_ref(x: jax.Array, group_size: int, bits: int = 8):
+    """Per-group symmetric quantization + effective-precision detection.
+
+    x: f32 [M, K] -> (xq int8 [M,K], scale f32 [M, K//G], eff_bits i32 [M, K//G]).
+    eff_bits is what Loom's OR-tree + leading-one detector reports per group.
+    """
+    m, k = x.shape
+    g = k // group_size
+    xg = x.reshape(m, g, group_size)
+    absmax = jnp.maximum(jnp.max(jnp.abs(xg), axis=-1), jnp.finfo(jnp.float32).tiny)
+    scale = absmax / ((1 << (bits - 1)) - 1)
+    xq = jnp.clip(jnp.round(xg / scale[..., None]),
+                  -(1 << (bits - 1)), (1 << (bits - 1)) - 1).astype(jnp.int8)
+    mag = jnp.max(jnp.abs(xq.astype(jnp.int32)), axis=-1)
+    eff = jnp.ceil(jnp.log2(mag.astype(jnp.float32) + 1.0)).astype(jnp.int32) + 1
+    eff = jnp.maximum(eff, 1)
+    return xq.reshape(m, k), scale, eff
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Exact softmax attention. q,k,v: [B, H, S, D] (H = q heads; k/v may
+    have fewer heads — GQA handled by the caller). window = sliding-window
+    size (keys within [i-window+1, i])."""
+    b, h, s, d = q.shape
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v).astype(q.dtype)

@@ -1,0 +1,601 @@
+"""Roofline-grade analysis of compiled (post-SPMD-partitioning) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each ``while`` body ONCE — a
+scan-over-layers model is undercounted by the layer count (verified on this
+container: an 8-step scan reports 1/8 the unrolled FLOPs). This module
+re-derives the three roofline inputs from ``compiled.as_text()`` with
+loop-trip multiplication:
+
+    flops             dot/convolution FLOPs (2*M*N*K), x trip counts
+    collective_bytes  operand bytes of all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute /
+                      collective-broadcast, x trip counts
+    hbm_bytes         per-kernel materialized traffic: for every top-level
+                      (post-fusion) instruction, operand + output buffer
+                      bytes, x trip counts. Parameters/constants/tuples/
+                      bitcasts are plumbing, not kernels -> skipped.
+
+All shapes in the post-partitioning module are PER-DEVICE shapes, so every
+number this module returns is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "token": 0,
+    "opaque": 0, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OPCODE_RE = re.compile(r"^\s*\(?[^=]*=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+# ops that move no HBM bytes of their own
+_PLUMBING = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "domain",
+             "opt-barrier", "custom-call"}
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Sum of bytes over every `dtype[dims]` group in a type string
+    (handles tuple types by summing members)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rhs: str
+    opcode: str
+    result_type: str
+    result_bytes: float
+    operands: list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: dict
+
+
+def _split_result_opcode(rhs: str):
+    """rhs after `name = ` -> (result_type_str, opcode, opcode_end_idx).
+
+    Handles tuple types with `/*index=N*/` comments (they contain `=`)."""
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    rest = rhs[i + 1:]
+                    m = re.match(r"\s*([\w\-]+)\(", rest)
+                    if m:
+                        return rhs[:i + 1], m.group(1), i + 1 + m.end()
+                    return rhs[:i + 1], "", i + 1
+        return rhs, "", len(rhs)
+    m = re.match(r"([a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\(",
+                 rhs)
+    if m:
+        return m.group(1), m.group(2), m.end()
+    return rhs, "", len(rhs)
+
+
+def parse_module(hlo_text: str) -> dict:
+    """Parse into {computation_name: Computation}."""
+    comps: dict[str, Computation] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line.strip()) if line and not line.startswith(" ") \
+            else None
+        if mc and "{" in line:
+            current = Computation(mc.group(1), {})
+            comps[current.name] = current
+            continue
+        if current is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        result_type, opcode, op_end = _split_result_opcode(rhs)
+        # operand names: %refs inside the op's top-level paren group
+        operands = []
+        paren = op_end - 1 if opcode else -1
+        if paren >= 0 and paren < len(rhs) and rhs[paren] == "(":
+            depth = 0
+            for i in range(paren, len(rhs)):
+                if rhs[i] == "(":
+                    depth += 1
+                elif rhs[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        operands = _OPERAND_RE.findall(rhs[paren:i + 1])
+                        break
+        current.instrs[name] = Instr(name, rhs, opcode, result_type,
+                                     _shape_bytes(result_type), operands)
+    return comps
+
+
+def _result_type_str(instr: Instr) -> str:
+    return instr.result_type
+
+
+def _dot_flops(instr: Instr, comp: Computation, comps: dict) -> float:
+    """2 * prod(result dims) * prod(contracting dim sizes of lhs)."""
+    out_dims = _shape_dims(_result_type_str(instr))
+    mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
+    if not instr.operands:
+        return 0.0
+    lhs = _lookup_shape(instr.operands[0], comp, comps)
+    if lhs is None:
+        return 0.0
+    k = 1
+    if mcd and mcd.group(1):
+        for d in mcd.group(1).split(","):
+            di = int(d)
+            if di < len(lhs):
+                k *= lhs[di]
+    out_n = math.prod(out_dims) if out_dims else 0
+    return 2.0 * out_n * k
+
+
+def _conv_flops(instr: Instr, comp: Computation, comps: dict) -> float:
+    out_dims = _shape_dims(_result_type_str(instr))
+    if len(instr.operands) < 2:
+        return 0.0
+    rhs_shape = _lookup_shape(instr.operands[1], comp, comps)
+    if rhs_shape is None:
+        return 0.0
+    # kernel total size / out_channels ~= macs per output element
+    mdim = re.search(r"dim_labels=([\w\?]+)_([\w\?]+)->", instr.rhs)
+    kernel_elems = math.prod(rhs_shape)
+    out_feat = out_dims[-1] if out_dims else 1
+    macs_per_out = kernel_elems / max(out_feat, 1)
+    return 2.0 * math.prod(out_dims) * macs_per_out
+
+
+def _lookup_shape(opname: str, comp: Computation, comps: dict):
+    ins = comp.instrs.get(opname)
+    if ins is None:
+        return None
+    return _shape_dims(_result_type_str(ins))
+
+
+def _find_trip_count(instr: Instr) -> int:
+    m = _TRIP_RE.search(instr.rhs)
+    return int(m.group(1)) if m else 1
+
+
+def _called_comps(instr: Instr) -> list:
+    out = []
+    for attr in ("calls", "body", "condition", "to_apply",
+                 "true_computation", "false_computation"):
+        m = re.search(attr + r"=%?([\w\.\-]+)", instr.rhs)
+        if m:
+            out.append((attr, m.group(1)))
+    # conditional with branch_computations={%a, %b}
+    m = re.search(r"branch_computations=\{([^}]*)\}", instr.rhs)
+    if m:
+        for nm in _OPERAND_RE.findall(m.group(1)):
+            out.append(("branch", nm))
+    return out
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    hbm_bytes_fused: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(default_factory=dict)
+    n_collectives: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "Totals":
+        return Totals(self.flops * k, self.hbm_bytes * k,
+                      self.hbm_bytes_fused * k,
+                      self.collective_bytes * k,
+                      {a: b * k for a, b in self.collective_by_kind.items()},
+                      {a: b * k for a, b in self.n_collectives.items()})
+
+    def add(self, o: "Totals"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.hbm_bytes_fused += o.hbm_bytes_fused
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collective_by_kind.items():
+            self.collective_by_kind[k] = self.collective_by_kind.get(k, 0) + v
+        for k, v in o.n_collectives.items():
+            self.n_collectives[k] = self.n_collectives.get(k, 0) + v
+
+
+def _fusion_hbm_bytes(instr: Instr, comp: Computation, comps: dict) -> float:
+    """HBM traffic of one fusion kernel, alias-aware.
+
+    XLA executes dynamic-update-slice fusions in place: the carried buffer
+    is NOT re-read/re-written, only the updated slice is. Likewise a
+    parameter consumed only by dynamic-slice reads just the slice. Naive
+    operand+output accounting overcounts scan-carried buffers by the
+    buffer/slice ratio x trip count (100x+ for layer scans)."""
+    called = [c for a, c in _called_comps(instr) if a == "calls"]
+    body = comps.get(called[0]) if called else None
+    if body is None:
+        operand_bytes = sum(comp.instrs[o].result_bytes
+                            for o in instr.operands if o in comp.instrs)
+        return operand_bytes + instr.result_bytes
+
+    # Pure layout fusions (copy/bitcast/transpose/reshape only) are CPU
+    # layout-assignment artifacts; TPU layout assignment avoids the copy.
+    body_ops = {i.opcode for i in body.instrs.values()} - {"parameter",
+                                                           "constant", "tuple",
+                                                           "get-tuple-element"}
+    if body_ops and body_ops <= {"copy", "bitcast", "transpose", "reshape",
+                                 "slice", "concatenate"}:
+        return 0.0
+
+    # Map body parameter index -> operand instr (for sizes).
+    params = {}
+    for ins in body.instrs.values():
+        if ins.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ins.rhs)
+            if m:
+                params[ins.name] = int(m.group(1))
+
+    # Classify each parameter's consumption inside the body.
+    read_bytes = 0.0
+    written_bytes = 0.0
+    dus_roots = False
+    param_reads = {name: 0.0 for name in params}
+    param_full = {name: False for name in params}
+    for ins in body.instrs.values():
+        if ins.opcode == "dynamic-slice":
+            src = ins.operands[0] if ins.operands else None
+            if src in params:
+                param_reads[src] += ins.result_bytes
+            continue
+        if ins.opcode == "dynamic-update-slice":
+            # operand 0 = buffer (in-place), operand 1 = update
+            if ins.operands:
+                buf = ins.operands[0]
+                upd = ins.operands[1] if len(ins.operands) > 1 else None
+                if upd in params:
+                    param_reads[upd] += body.instrs[upd].result_bytes
+                    param_full[upd] = True
+                if upd in body.instrs and upd not in params:
+                    written_bytes += body.instrs[upd].result_bytes
+                elif upd in params:
+                    written_bytes += body.instrs[upd].result_bytes
+                if buf in params:
+                    pass  # aliased in place: no traffic for the buffer
+            dus_roots = True
+            continue
+        for o in ins.operands:
+            if o in params:
+                param_full[o] = True
+    for name in params:
+        read_bytes += (body.instrs[name].result_bytes if param_full[name]
+                       else param_reads[name])
+    if not dus_roots:
+        written_bytes = instr.result_bytes
+    return read_bytes + written_bytes
+
+
+def _param_derived_names(comp: Computation) -> set:
+    """Instruction names whose value is a (plumbed) view of a computation
+    parameter — reads of these are persistent-buffer HBM traffic that no
+    fusion can elide (weights, optimizer moments, caches)."""
+    derived = set()
+    for ins in comp.instrs.values():   # insertion order = def order
+        if ins.opcode == "parameter":
+            derived.add(ins.name)
+        elif ins.opcode in ("get-tuple-element", "bitcast", "copy",
+                            "reshape", "transpose"):
+            if ins.operands and ins.operands[0] in derived:
+                derived.add(ins.name)
+    return derived
+
+
+def _fusion_fused_bytes(instr: Instr, comp: Computation, comps: dict,
+                        param_derived: set) -> float:
+    """Fusion-oracle traffic of one fusion: only materialization points
+    inside the body (dot/gather/scatter/DS/DUS) plus persistent-buffer
+    operand reads. Elementwise chains are assumed fused away (TPU).
+
+    Body parameters consumed ONLY by dynamic-(update-)slice are charged at
+    slice granularity — a DS/DUS fusion over a scan-carried cache touches
+    one slab, not the whole buffer (the buffer is aliased in place)."""
+    called = [c for a, c in _called_comps(instr) if a == "calls"]
+    body = comps.get(called[0]) if called else None
+    if body is None:
+        return sum(comp.instrs[o].result_bytes for o in instr.operands
+                   if o in param_derived and o in comp.instrs)
+
+    params = {}
+    for ins in body.instrs.values():
+        if ins.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ins.rhs)
+            if m:
+                params[ins.name] = int(m.group(1))
+    # classify: which params are consumed by an op NOT already charged?
+    param_elementwise = {name: False for name in params}
+    total = 0.0
+    for ins in body.instrs.values():
+        if ins.opcode in ("dot", "convolution"):
+            total += ins.result_bytes + sum(
+                body.instrs[o].result_bytes for o in ins.operands
+                if o in body.instrs)
+        elif ins.opcode in ("gather", "scatter"):
+            total += 2.0 * ins.result_bytes
+        elif ins.opcode == "dynamic-slice":
+            total += 2.0 * ins.result_bytes           # slice read + write
+        elif ins.opcode == "dynamic-update-slice":
+            upd = (body.instrs[ins.operands[1]].result_bytes
+                   if len(ins.operands) > 1 and ins.operands[1] in body.instrs
+                   else ins.result_bytes)
+            total += 2.0 * upd                        # update read + write
+        elif ins.opcode in ("parameter", "constant", "tuple",
+                            "get-tuple-element", "bitcast"):
+            continue
+        else:
+            for o in ins.operands:
+                if o in params:
+                    param_elementwise[o] = True
+    # persistent reads only for params an elementwise op fully consumes
+    idx_to_name = {i: n for n, i in params.items()}
+    for j, o in enumerate(instr.operands):
+        if o in param_derived and o in comp.instrs and j in idx_to_name \
+                and param_elementwise.get(idx_to_name[j], False):
+            total += comp.instrs[o].result_bytes
+    return total
+
+
+def _instr_fused_bytes(ins: Instr, comp: Computation, comps: dict,
+                       param_derived: set) -> float:
+    """Fusion-oracle HBM bytes for one top-level instruction."""
+    op = ins.opcode
+    if op in ("dot", "convolution"):
+        ops_b = sum(comp.instrs[o].result_bytes for o in ins.operands
+                    if o in comp.instrs)
+        return ops_b + ins.result_bytes
+    if op == "fusion":
+        return _fusion_fused_bytes(ins, comp, comps, param_derived)
+    if op == "dynamic-slice":
+        return 2.0 * ins.result_bytes
+    if op == "dynamic-update-slice":
+        upd = (comp.instrs[ins.operands[1]].result_bytes
+               if len(ins.operands) > 1 and ins.operands[1] in comp.instrs
+               else ins.result_bytes)
+        return 2.0 * upd
+    if op in ("gather", "scatter"):
+        return 2.0 * ins.result_bytes
+    if op in ("rng", "rng-bit-generator", "sort", "reduce-window",
+              "select-and-scatter"):
+        return ins.result_bytes
+    if op in COLLECTIVE_OPS:
+        ob = sum(comp.instrs[o].result_bytes for o in ins.operands
+                 if o in comp.instrs) or ins.result_bytes
+        return 2.0 * ob   # collectives read + write HBM around the wire hop
+    # elementwise / broadcast / reduce / convert: fused away, except reads
+    # of persistent buffers.
+    return sum(comp.instrs[o].result_bytes for o in ins.operands
+               if o in param_derived and o in comp.instrs)
+
+
+def _instr_hbm_bytes(ins: Instr, comp: Computation, comps: dict) -> float:
+    """Alias-aware HBM bytes for a top-level instruction."""
+    if ins.opcode == "fusion":
+        return _fusion_hbm_bytes(ins, comp, comps)
+    if ins.opcode == "dynamic-slice":
+        return 2.0 * ins.result_bytes
+    if ins.opcode == "dynamic-update-slice":
+        upd = (comp.instrs[ins.operands[1]].result_bytes
+               if len(ins.operands) > 1 and ins.operands[1] in comp.instrs
+               else ins.result_bytes)
+        return 2.0 * upd
+    if ins.opcode == "copy":
+        return 0.0  # layout copy: a CPU-backend artifact, absent on TPU
+    operand_bytes = sum(comp.instrs[o].result_bytes
+                        for o in ins.operands if o in comp.instrs)
+    return operand_bytes + ins.result_bytes
+
+
+def _analyze_comp(comp_name: str, comps: dict, cache: dict,
+                  top_level: bool) -> Totals:
+    """Totals for one computation, recursing into control-flow callees.
+
+    ``top_level``: whether instructions here are real kernels (True for the
+    entry / while bodies / called computations) or fused sub-instructions
+    (False for fusion bodies — their dots count FLOPs, but bytes are
+    accounted at the fusion call site).
+    """
+    key = (comp_name, top_level)
+    if key in cache:
+        return cache[key]
+    comp = comps.get(comp_name)
+    t = Totals()
+    if comp is None:
+        cache[key] = t
+        return t
+    param_derived = _param_derived_names(comp) if top_level else set()
+    for ins in comp.instrs.values():
+        op = ins.opcode
+        # --- FLOPs ---
+        if op == "dot":
+            t.flops += _dot_flops(ins, comp, comps)
+        elif op == "convolution":
+            t.flops += _conv_flops(ins, comp, comps)
+        # --- collectives ---
+        if op in COLLECTIVE_OPS:
+            ob = sum(filter(None, (
+                (comps[comp_name].instrs[o].result_bytes
+                 if o in comp.instrs else 0.0) for o in ins.operands)))
+            if ob == 0.0:   # operands may be parameters of entry
+                ob = ins.result_bytes
+            t.collective_bytes += ob
+            t.collective_by_kind[op] = t.collective_by_kind.get(op, 0) + ob
+            t.n_collectives[op] = t.n_collectives.get(op, 0) + 1
+        # --- HBM bytes (top-level kernels only) ---
+        if top_level and op not in _PLUMBING and op not in ("while",
+                                                            "conditional"):
+            t.hbm_bytes += _instr_hbm_bytes(ins, comp, comps)
+            t.hbm_bytes_fused += _instr_fused_bytes(ins, comp, comps,
+                                                    param_derived)
+        # --- recursion ---
+        if op == "fusion":
+            for _, callee in _called_comps(ins):
+                sub = _analyze_comp(callee, comps, cache, top_level=False)
+                t.flops += sub.flops
+                t.collective_bytes += sub.collective_bytes
+                for k, v in sub.collective_by_kind.items():
+                    t.collective_by_kind[k] = t.collective_by_kind.get(k, 0) + v
+        elif op == "while":
+            trips = _find_trip_count(ins)
+            for attr, callee in _called_comps(ins):
+                sub = _analyze_comp(callee, comps, cache, top_level=True)
+                t.add(sub.scaled(trips if attr == "body" else trips + 1))
+        elif op in ("call", "conditional", "async-start"):
+            for _, callee in _called_comps(ins):
+                t.add(_analyze_comp(callee, comps, cache, top_level=True))
+        elif op in ("reduce", "sort", "scatter", "select-and-scatter",
+                    "map", "reduce-window"):
+            # to_apply bodies are elementwise lambdas -> negligible
+            pass
+    cache[key] = t
+    return t
+
+
+def analyze_hlo(hlo_text: str, entry: str | None = None) -> Totals:
+    comps = parse_module(hlo_text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+    return _analyze_comp(entry, comps, {}, top_level=True)
+
+
+def attribute(hlo_text: str, top_k: int = 12) -> dict:
+    """Per-op_name attribution of HBM bytes (fusion-oracle) and collective
+    bytes, with while-trip multiplication — the 'profile' of the dry-run.
+
+    Returns {"memory": [(label, bytes)...], "collective": [...]}."""
+    comps = parse_module(hlo_text)
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.MULTILINE)
+    entry = m.group(1) if m else next(iter(comps))
+
+    trips: dict = {}
+
+    def walk(name, mult):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        trips[name] = trips.get(name, 0) + mult
+        for ins in comp.instrs.values():
+            if ins.opcode == "while":
+                tc = _find_trip_count(ins)
+                for attr, callee in _called_comps(ins):
+                    walk(callee, mult * (tc if attr == "body" else tc + 1))
+            elif ins.opcode in ("call", "conditional", "async-start"):
+                for _, callee in _called_comps(ins):
+                    walk(callee, mult)
+
+    walk(entry, 1)
+    mem: dict = {}
+    coll: dict = {}
+    for cname, mult in trips.items():
+        comp = comps[cname]
+        pd = _param_derived_names(comp)
+        for ins in comp.instrs.values():
+            if ins.opcode in _PLUMBING or ins.opcode in ("while",
+                                                         "conditional"):
+                continue
+            mm = re.search(r'op_name="([^"]*)"', ins.rhs)
+            nm = mm.group(1) if mm else "xla-internal"
+            side = "bwd" if "transpose" in nm else "fwd"
+            label = f"{side}:{nm.split('/')[-1][:40]}:{ins.opcode[:12]}"
+            b = _instr_fused_bytes(ins, comp, comps, pd) * mult
+            if b:
+                mem[label] = mem.get(label, 0) + b
+            if ins.opcode in COLLECTIVE_OPS:
+                ob = sum(comp.instrs[o].result_bytes for o in ins.operands
+                         if o in comp.instrs) or ins.result_bytes
+                coll[label] = coll.get(label, 0) + ob * mult
+    top = lambda d: sorted(d.items(), key=lambda kv: -kv[1])[:top_k]
+    return {"memory": top(mem), "collective": top(coll)}
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e constants per the assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per chip, one direction)
+
+
+def roofline_terms(totals: Totals, model_flops_per_device: float = 0.0) -> dict:
+    """Three roofline terms in seconds (per-device quantities in, per-chip
+    constants down). The dominant term is the bound.
+
+    The memory term uses the fusion-oracle byte count (traffic at true
+    materialization points: dots, slices, collectives, persistent buffers)
+    — the XLA-CPU module materializes every elementwise op that the TPU
+    backend would fuse, so the raw count (reported as t_memory_raw_s) is a
+    loose upper bound, not a TPU prediction."""
+    t_compute = totals.flops / PEAK_FLOPS
+    t_memory = totals.hbm_bytes_fused / HBM_BW
+    t_memory_raw = totals.hbm_bytes / HBM_BW
+    t_coll = totals.collective_bytes / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    out = {
+        "flops": totals.flops,
+        "hbm_bytes": totals.hbm_bytes_fused,
+        "hbm_bytes_raw": totals.hbm_bytes,
+        "collective_bytes": totals.collective_bytes,
+        "collective_by_kind": totals.collective_by_kind,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_raw_s": t_memory_raw,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }
+    if model_flops_per_device:
+        out["model_flops_per_device"] = model_flops_per_device
+        out["useful_flop_ratio"] = model_flops_per_device / max(totals.flops, 1)
+        out["roofline_fraction"] = (model_flops_per_device / PEAK_FLOPS) \
+            / max(out["bound_s"], 1e-30)
+    return out

@@ -1,0 +1,22 @@
+"""Production meshes. Functions, not module constants — importing this
+module must never touch jax device state (the dry-run sets the 512-device
+XLA flag before any jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods of
+    256 = 512 chips (pod, data, model); the pod axis carries pure data
+    parallelism (gradient reduction only — the slow DCN hop)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices: int | None = None, model: int = 1):
+    """Small mesh over locally visible devices (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,136 @@
+"""The assigned input-shape grid + ShapeDtypeStruct input builders.
+
+Every (arch x shape) cell is defined here; builders return weak-type-
+correct, shardable ShapeDtypeStruct stand-ins for every model input
+(params, optimizer state, caches, token batches) — no device allocation,
+exactly what jit(...).lower() consumes for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro import configs
+from repro.models import model as M
+from repro.optim import AdamWConfig
+from repro.optim.adamw import adamw_init, opt_state_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k":    ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k":  ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k":   ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def cell_is_applicable(arch: str, shape: str) -> bool:
+    """long_500k needs sub-quadratic attention (SSM / hybrid / windowed)."""
+    if shape != "long_500k":
+        return True
+    return configs.get(arch).sub_quadratic
+
+
+def batch_structs(cfg, cell: ShapeCell):
+    """Token-batch ShapeDtypeStructs + logical PartitionSpecs."""
+    b, s = cell.batch, cell.seq
+    if cell.kind == "train":
+        shapes = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                  "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        specs = {"tokens": PS("dp", None), "labels": PS("dp", None)}
+        if cfg.n_img_tokens:
+            shapes["img_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+            specs["img_embeds"] = PS("dp", None, None)
+        return shapes, specs
+    if cell.kind == "prefill":
+        shapes = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        specs = {"tokens": PS("dp", None)}
+        if cfg.n_img_tokens:
+            shapes["img_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+            specs["img_embeds"] = PS("dp", None, None)
+        return shapes, specs
+    shapes = {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = {"token": PS("dp"), "pos": PS()}
+    return shapes, specs
+
+
+def _eval_shape_with_specs(f):
+    """eval_shape over a function returning (arrays, spec_tree): the spec
+    tree (static Python objects) is captured via closure side-effect."""
+    box = {}
+
+    def wrapped():
+        arrays, specs = f()
+        box["specs"] = specs
+        return arrays
+
+    structs = jax.eval_shape(wrapped)
+    return structs, box["specs"]
+
+
+def param_structs(cfg, *, serving_mode: str | None = None, policy=None):
+    """(struct tree, logical spec tree) for the parameters; optionally the
+    packed serving representation (paper's bit-interleaved storage)."""
+    params, specs = _eval_shape_with_specs(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    if serving_mode and serving_mode != "dense":
+        from repro.core.policy import uniform_policy
+        pol = policy or uniform_policy(8, 8)
+        return M.convert_structs_for_serving(params, specs, pol, serving_mode)
+    return params, specs
+
+
+def train_state_structs(cfg, opt_cfg: AdamWConfig):
+    """(state struct tree, state logical-spec tree) for the trainer."""
+    params, specs = _eval_shape_with_specs(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+    return ({"params": params, "opt": opt},
+            {"params": specs, "opt": opt_state_specs(specs)})
+
+
+def cache_structs(cfg, cell: ShapeCell):
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, cell.batch, cell.seq))
+    return cache, M.cache_spec_tree(cfg)
+
+
+def n_params(param_struct_tree) -> int:
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(param_struct_tree))
+
+
+def active_param_count(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts — MoE active = shared + top_k
+    routed + non-expert. Used for the MODEL_FLOPS roofline row."""
+    params, _ = _eval_shape_with_specs(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    total = n_params(params)
+    if cfg.moe is None:
+        return total, total
+    import math
+    inactive = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if any(k in ("w_gate", "w_up", "w_down") for k in keys) and leaf.ndim == 4:
+            # stacked expert tensor [G, E, din, dout]
+            e = leaf.shape[1]
+            sz = math.prod(leaf.shape)
+            inactive += sz * (1 - cfg.moe.top_k / e)
+    return total, int(total - inactive)

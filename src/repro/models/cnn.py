@@ -1,0 +1,103 @@
+"""The paper's own model family: a CNN with CVLs + FCLs via Loom.
+
+Convolutions are lowered to im2col + LoomLinear matmuls — exactly how the
+SIP array consumes them (weight reuse across windows = the matmul's M
+dimension). Used by the Table-1 benchmark to run the Judd-style precision
+profiler and the dynamic-precision measurements live on CPU, and by the
+quickstart example. Scaled to CIFAR-size so it runs on this container.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    out_ch: int
+    kernel: int
+    stride: int = 1
+    pool: int = 1          # max-pool window after the conv (1 = none)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "paper-cnn"
+    in_ch: int = 3
+    img: int = 32
+    convs: tuple = (
+        ConvSpec("conv1", 32, 3, pool=2),
+        ConvSpec("conv2", 64, 3, pool=2),
+        ConvSpec("conv3", 128, 3, pool=2),
+    )
+    fcs: tuple = (256, 10)
+
+    @property
+    def layer_names(self):
+        return tuple(c.name for c in self.convs) + tuple(
+            f"fc{i}" for i in range(len(self.fcs)))
+
+
+def init_params(key, cfg: CNNConfig, dtype=jnp.float32):
+    params, specs = {}, {}
+    ch = cfg.in_ch
+    side = cfg.img
+    for c in cfg.convs:
+        key, k = jax.random.split(key)
+        d_in = c.kernel * c.kernel * ch
+        params[c.name], specs[c.name] = L.linear_init(k, d_in, c.out_ch,
+                                                      None, None, dtype)
+        ch = c.out_ch
+        side = side // c.stride // c.pool
+    d_in = ch * side * side
+    for i, width in enumerate(cfg.fcs):
+        key, k = jax.random.split(key)
+        params[f"fc{i}"], specs[f"fc{i}"] = L.linear_init(k, d_in, width,
+                                                          None, None, dtype)
+        d_in = width
+    return params, specs
+
+
+def _im2col(x: jax.Array, kernel: int, stride: int) -> jax.Array:
+    """x: [B, H, W, C] -> patches [B, Ho, Wo, k*k*C] (valid padding=same)."""
+    b, h, w, c = x.shape
+    pad = kernel // 2
+    x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = []
+    for di in range(kernel):
+        for dj in range(kernel):
+            cols.append(x[:, di:di + h:stride, dj:dj + w:stride, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def forward(params, cfg: CNNConfig, x: jax.Array, exec_cfg: L.ExecConfig,
+            collect_activations: bool = False):
+    """x: [B, H, W, C] f32 -> logits [B, n_classes] (+ per-layer inputs)."""
+    acts = {}
+    for c in cfg.convs:
+        if collect_activations:
+            acts[c.name] = x
+        patches = _im2col(x, c.kernel, c.stride)
+        y = L.linear_apply(params[c.name], patches, exec_cfg, c.name)
+        y = jax.nn.relu(y)
+        if c.pool > 1:
+            b, h, w, ch = y.shape
+            y = y.reshape(b, h // c.pool, c.pool, w // c.pool, c.pool, ch)
+            y = jnp.max(y, axis=(2, 4))   # the SIP max comparator
+        x = y
+    x = x.reshape(x.shape[0], -1)
+    for i in range(len(cfg.fcs)):
+        if collect_activations:
+            acts[f"fc{i}"] = x
+        x = L.linear_apply(params[f"fc{i}"], x, exec_cfg, f"fc{i}")
+        if i < len(cfg.fcs) - 1:
+            x = jax.nn.relu(x)
+    if collect_activations:
+        return x, acts
+    return x

@@ -1,0 +1,165 @@
+"""Common layers: RMSNorm, RoPE, embeddings, and LoomLinear.
+
+LoomLinear is the integration point of the paper's technique: every matmul
+in every architecture flows through it, dispatching on the layer's
+execution mode:
+
+    dense        bf16 matmul              (DPNN-equivalent TPU baseline)
+    fake_quant   QAT: STE fake-quant of activations (Pa) and weights (Pw),
+                 then a dense matmul — the training-time integration of the
+                 per-layer precision profiles.
+    serve_int8   LM_8b: dynamic activation quant + int8 weights stored in
+                 the param tree, one int8 MXU pass. Weight bytes = 8/16.
+    serve_packed paper-faithful bit-serial path: weights stored bit-packed
+                 [Pw, K/8, N] in the param tree; bytes = Pw/16 of bf16;
+                 Pw plane passes (Pallas kernel on TPU, XLA oracle off-TPU).
+
+Serving modes require ``convert_params_for_serving`` to be run once over
+the trained param tree (it replaces each linear's "w" with the quantized /
+packed representation — the paper's offline weight packing step).
+
+Params are plain nested dicts; a parallel dict of PartitionSpec with
+LOGICAL axis names ("fsdp"/"tp"/None, resolved by repro.dist.sharding)
+is built by the same constructors.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.core import bitpack, quantize as q
+from repro.core.policy import PrecisionPolicy
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """How linears execute. ``mode`` as in the module docstring."""
+    mode: str = "dense"              # dense | fake_quant | serve_int8 | serve_packed
+    policy: PrecisionPolicy = PrecisionPolicy()
+    use_pallas: bool = False         # Mosaic kernels (TPU) vs XLA oracle path
+    interpret: bool = True           # Pallas interpret mode (CPU validation)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs        # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                              # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # squared ReLU (nemotron)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Param construction. Each init returns (params_dict, specs_dict) with
+# logical-axis PartitionSpecs.
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, in_axis=None, out_axis=None,
+                dtype=jnp.bfloat16):
+    scale = d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    return {"w": w.astype(dtype)}, {"w": PS(in_axis, out_axis)}
+
+
+def linear_apply(p: dict, x: jax.Array, exec_cfg: ExecConfig,
+                 layer_name: str = "") -> jax.Array:
+    """Dispatch a linear through the configured Loom execution mode."""
+    mode = exec_cfg.mode
+    if mode == "dense":
+        return x @ p["w"].astype(x.dtype)
+    prec = exec_cfg.policy.lookup(layer_name)
+    if mode == "fake_quant":
+        xq = q.fake_quant(x, prec.a_bits)
+        wq = q.fake_quant(p["w"].astype(jnp.float32), prec.w_bits).astype(x.dtype)
+        return xq @ wq
+    if mode == "serve_int8":
+        # LM_8b: one int8 MXU pass against pre-quantized weights.
+        xq, x_scale = q.quantize(x.astype(jnp.float32), min(prec.a_bits, 8))
+        y = jax.lax.dot_general(
+            xq.astype(jnp.int8), p["wq"],
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return (y.astype(jnp.float32) * (x_scale * p["w_scale"])).astype(x.dtype)
+    if mode == "serve_packed":
+        # Paper-faithful bit-serial path over pre-packed planes. The
+        # weight precision is intrinsic to the packed tensor (its plane
+        # dim) — the policy only sets the activation precision.
+        return ops.loom_linear_serve(
+            x, p["w_packed"], p["w_scale"], a_bits=prec.a_bits,
+            w_bits=p["w_packed"].shape[0], use_pallas=exec_cfg.use_pallas,
+            interpret=exec_cfg.interpret)
+    raise ValueError(mode)
+
+
+def convert_linear_for_serving(p: dict, spec: dict, prec, mode: str):
+    """Offline weight packing (the paper's bit-interleaved storage step).
+
+    Returns (new_params, new_specs) for one linear. For serve_packed the
+    packed tensor's K/8 axis inherits the input sharding and N the output
+    sharding; planes replicated.
+    """
+    w = p["w"].astype(jnp.float32)
+    in_ax, out_ax = spec["w"][0], spec["w"][1]
+    if mode == "serve_int8":
+        wq, w_scale = q.quantize(w, 8)
+        return ({"wq": wq.astype(jnp.int8), "w_scale": w_scale.astype(jnp.float32)},
+                {"wq": PS(in_ax, out_ax), "w_scale": PS(None, None)})
+    if mode == "serve_packed":
+        wq, w_scale = q.quantize(w, prec.w_bits)
+        packed = bitpack.pack_weights(wq, prec.w_bits)
+        return ({"w_packed": packed, "w_scale": w_scale.astype(jnp.float32)},
+                {"w_packed": PS(None, in_ax, out_ax), "w_scale": PS(None, None)})
+    raise ValueError(mode)
+
+
+def convert_linear_specs(spec: dict, mode: str) -> dict:
+    """Spec-only counterpart of convert_linear_for_serving."""
+    in_ax, out_ax = spec["w"][0], spec["w"][1]
+    if mode == "serve_int8":
+        return {"wq": PS(in_ax, out_ax), "w_scale": PS(None, None)}
+    if mode == "serve_packed":
+        return {"w_packed": PS(None, in_ax, out_ax), "w_scale": PS(None, None)}
+    raise ValueError(mode)
+
+
+def is_linear(p) -> bool:
+    return isinstance(p, dict) and ("w" in p and isinstance(p["w"], (jax.Array, jax.ShapeDtypeStruct))
+                                    and getattr(p["w"], "ndim", 0) == 2)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    w = jax.random.normal(key, (vocab, d_model), dtype=jnp.float32) * 0.02
+    return {"emb": w.astype(dtype)}, {"emb": PS("tp", "fsdp")}
+
+
+def embed_apply(p: dict, tokens: jax.Array) -> jax.Array:
+    return p["emb"][tokens]
+
+
+def norm_init(d: int, dtype=jnp.bfloat16):
+    return {"g": jnp.zeros((d,), dtype)}, {"g": PS(None)}

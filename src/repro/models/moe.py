@@ -1,0 +1,288 @@
+"""Mixture-of-Experts: top-k router, shared experts, per-row scatter dispatch.
+
+Dispatch is scatter/gather-based (cumsum positions + capacity drop), NOT
+one-hot einsum — so compiled FLOPs reflect the ACTIVE expert compute
+(top_k/E of dense), which is what the roofline analysis must see, while
+the data movement (the EP all-to-all) shows up as bytes, which is what it
+is. Dispatch is computed independently PER SEQUENCE ROW: the scatter then
+has a leading batch dim that stays data-sharded, so no cross-device
+scatter traffic on the dp axis; the E axis of the dispatch buffer is
+sharded over "tp" (true expert parallelism) when n_experts % tp == 0
+(deepseek 64, jamba 16), else TP-within-expert (mixtral's 8 experts on a
+16-way axis: d_ff sharded, experts replicated).
+
+Shared experts (deepseek) are plain dense FFNs. The router stays full
+precision (tiny, accuracy-critical); expert weights flow through the Loom
+execution modes — per-expert weight precision is the paper's per-group
+weight profile at expert granularity (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.core import bitpack, quantize as quant
+from repro.dist.sharding import constraint
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                    # per-expert hidden size
+    n_experts: int
+    top_k: int
+    n_shared: int = 0            # shared (always-on) experts, deepseek-style
+    shared_d_ff: int = 0         # hidden size of the shared expert block
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    expert_parallel: bool = True  # experts over "tp" (else d_ff over "tp")
+    shard_map_ep: bool = False    # explicit shard_map EP (§Perf cell B)
+    router_aux_coef: float = 0.01
+
+
+def init(key, cfg: MoEConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    if cfg.expert_parallel:
+        e_ax, d_ax, f_ax = "tp", "fsdp", None
+    else:
+        e_ax, d_ax, f_ax = None, "fsdp", "tp"
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e), jnp.float32) * scale_in)},
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * scale_out).astype(dtype),
+    }
+    s = {
+        "router": {"w": PS(None, None)},
+        "w_gate": PS(e_ax, d_ax, f_ax),
+        "w_up": PS(e_ax, d_ax, f_ax),
+        "w_down": PS(e_ax, f_ax, d_ax),
+    }
+    if cfg.n_shared > 0:
+        sf = cfg.shared_d_ff or cfg.d_ff * cfg.n_shared
+        ksh = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": {"w": (jax.random.normal(ksh[0], (d, sf), jnp.float32) * scale_in).astype(dtype)},
+            "w_up": {"w": (jax.random.normal(ksh[1], (d, sf), jnp.float32) * scale_in).astype(dtype)},
+            "w_down": {"w": (jax.random.normal(ksh[2], (sf, d), jnp.float32) * scale_out).astype(dtype)},
+        }
+        s["shared"] = {"w_gate": {"w": PS("fsdp", "tp")},
+                       "w_up": {"w": PS("fsdp", "tp")},
+                       "w_down": {"w": PS("tp", "fsdp")}}
+    return p, s
+
+
+def _route(logits: jax.Array, cfg: MoEConfig):
+    """Top-k gating. logits: [B, S, E] -> (probs [B,S,k], ids, aux)."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    probs, ids = jax.lax.top_k(gates, cfg.top_k)
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-9)
+    me = jnp.mean(gates, axis=(0, 1))                              # [E]
+    ce = jnp.mean(jnp.sum(
+        jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = cfg.router_aux_coef * cfg.n_experts * jnp.sum(me * ce)
+    return probs, ids, aux
+
+
+def _expert_mm(buf: jax.Array, p: dict, key: str, x_dtype) -> jax.Array:
+    """buf: [B, E, C, din] x expert weights -> [B, E, C, dout].
+
+    Dispatches on the stored representation: bf16 ("w_*" raw array), int8
+    ({"wq","scale"}), or bit-packed planes ({"w_packed","scale"}).
+    """
+    w = p[key]
+    if isinstance(w, dict) and "wq" in w:        # serve_int8 (weight-only W8)
+        y = jnp.einsum("becd,edf->becf", buf, w["wq"].astype(buf.dtype))
+        return y * w["scale"][None, :, None, None].astype(y.dtype)
+    if isinstance(w, dict) and "w_packed" in w:  # serve_packed (bit-serial)
+        packed = w["w_packed"]                   # [E, Pw, din//8, dout]
+        bits = packed.shape[1]
+        wq = jax.vmap(lambda m: bitpack.unpack_weights(m, bits))(packed)
+        y = jnp.einsum("becd,edf->becf", buf, wq.astype(buf.dtype))
+        return y * w["scale"][None, :, None, None].astype(y.dtype)
+    return jnp.einsum("becd,edf->becf", buf, w.astype(buf.dtype))
+
+
+def apply(p, cfg: MoEConfig, x: jax.Array, exec_cfg: L.ExecConfig):
+    """x: [B, S, d]. Returns (y, aux_loss). Dispatch is per sequence row."""
+    if cfg.shard_map_ep:
+        return apply_shardmap(p, cfg, x, exec_cfg)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(s * k / e * cfg.capacity_factor))
+
+    xr = x
+    if exec_cfg.mode == "fake_quant":
+        prec = exec_cfg.policy.lookup("moe_expert")
+        xr = quant.fake_quant(x, prec.a_bits)
+
+    logits = x.astype(jnp.float32) @ p["router"]["w"]              # [B,S,E]
+    probs, ids, aux = _route(logits, cfg)                          # [B,S,k]
+
+    flat_ids = ids.reshape(b, s * k)                               # [B, S*k]
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)          # [B, S*k, E]
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos_in_e, flat_ids[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_ids * cap + pos, e * cap)          # sink slot
+
+    # scatter tokens into [B, E*cap(+1 sink), d]
+    tok = jnp.repeat(xr, k, axis=1).reshape(b, s * k, d)
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    bidx = jnp.arange(b)[:, None]
+    buf = buf.at[bidx, slot].set(tok)
+    buf = buf[:, :e * cap].reshape(b, e, cap, d)
+    buf = constraint(buf, PS("dp", "tp" if cfg.expert_parallel else None,
+                             None, None))
+
+    h_g = _expert_mm(buf, p, "w_gate", x.dtype)
+    h_u = _expert_mm(buf, p, "w_up", x.dtype)
+    h = L.activation_fn(cfg.activation)(h_g) * h_u
+    if exec_cfg.mode == "fake_quant":
+        h = quant.fake_quant(h, exec_cfg.policy.lookup("moe_expert").a_bits)
+    out_buf = _expert_mm(h, p, "w_down", x.dtype)                  # [B,E,C,d]
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(b, e * cap, d),
+         jnp.zeros((b, 1, d), out_buf.dtype)], axis=1)
+
+    gathered = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    w_flat = jnp.where(keep, probs.reshape(b, s * k), 0.0).astype(x.dtype)
+    comb = (gathered * w_flat[..., None]).reshape(b, s, k, d).sum(axis=2)
+
+    if cfg.n_shared > 0:
+        sh = p["shared"]
+        g = L.linear_apply(sh["w_gate"], x, exec_cfg, "moe_shared_gate")
+        u = L.linear_apply(sh["w_up"], x, exec_cfg, "moe_shared_up")
+        hh = L.activation_fn(cfg.activation)(g) * u
+        comb = comb + L.linear_apply(sh["w_down"], hh, exec_cfg,
+                                     "moe_shared_down").astype(comb.dtype)
+    return comb, aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit shard_map expert parallelism (§Perf cell B).
+#
+# The einsum/scatter dispatch above leaves the collective schedule to
+# GSPMD, which cannot partition a scatter onto an expert-sharded buffer and
+# falls back to replicating the [B, E*cap, d] dispatch buffer per layer —
+# the dominant collective cost of the MoE train cells (deepseek baseline:
+# 5.5 TB/device/step of all-reduce).
+#
+# Here each model-rank owns E/tp experts. Activations are already
+# replicated across "model" under the ambient sharding, so dispatch is a
+# purely LOCAL gather (tokens routed to this rank's experts), expert
+# compute is local, and the ONLY collective is one bf16 psum of the
+# combined [B, S, d] output — the same volume as a dense TP layer.
+# ---------------------------------------------------------------------------
+
+def _local_moe(cfg: MoEConfig, e_local: int, tp_axis: str, x_l, rw,
+               wg, wu, wd, shared_wg, shared_wu, shared_wd, exec_mode,
+               a_bits, has_shared):
+    """Per-rank body under shard_map. x_l: [B_l, S, d] (local batch rows,
+    full seq, full d). Expert weights: local [e_local, d, f] shards."""
+    b, s, d = x_l.shape
+    k = cfg.top_k
+    e = cfg.n_experts
+    cap = max(1, int(s * k / e * cfg.capacity_factor))
+    rank = jax.lax.axis_index(tp_axis)
+
+    xr = x_l
+    if exec_mode == "fake_quant":
+        xr = quant.fake_quant(x_l, a_bits)
+
+    logits = x_l.astype(jnp.float32) @ rw                 # replicated math
+    probs, ids, aux = _route(logits, cfg)                 # [B,S,k]
+    flat_ids = ids.reshape(b, s * k)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos_in_e, flat_ids[..., None], axis=2)[..., 0]
+    local = flat_ids - rank * e_local
+    is_ours = (local >= 0) & (local < e_local)
+    keep = is_ours & (pos < cap)
+    slot = jnp.where(keep, local * cap + pos, e_local * cap)
+
+    tok = jnp.repeat(xr, k, axis=1).reshape(b, s * k, d)
+    buf = jnp.zeros((b, e_local * cap + 1, d), x_l.dtype)
+    bidx = jnp.arange(b)[:, None]
+    buf = buf.at[bidx, slot].set(tok)
+    buf = buf[:, :e_local * cap].reshape(b, e_local, cap, d)
+
+    h_g = jnp.einsum("becd,edf->becf", buf, wg.astype(buf.dtype))
+    h_u = jnp.einsum("becd,edf->becf", buf, wu.astype(buf.dtype))
+    h = L.activation_fn(cfg.activation)(h_g) * h_u
+    if exec_mode == "fake_quant":
+        h = quant.fake_quant(h, a_bits)
+    out_buf = jnp.einsum("becf,efd->becd", h, wd.astype(h.dtype))
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(b, e_local * cap, d),
+         jnp.zeros((b, 1, d), out_buf.dtype)], axis=1)
+    gathered = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    w_flat = jnp.where(keep, probs.reshape(b, s * k), 0.0).astype(x_l.dtype)
+    comb = (gathered * w_flat[..., None]).reshape(b, s, k, d).sum(axis=2)
+
+    if has_shared:
+        # shared experts: d_ff sharded over the same axis -> partial sums
+        # ride the same psum below.
+        g = xr @ shared_wg.astype(xr.dtype)
+        u = xr @ shared_wu.astype(xr.dtype)
+        hh = L.activation_fn(cfg.activation)(g) * u
+        comb = comb + (hh @ shared_wd.astype(hh.dtype))
+
+    comb = jax.lax.psum(comb, tp_axis)
+    return comb, aux
+
+
+def apply_shardmap(p, cfg: MoEConfig, x: jax.Array, exec_cfg: L.ExecConfig):
+    """shard_map-EP forward. Requires n_experts % tp == 0 and an ambient
+    mesh; falls back to apply() otherwise."""
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import sharding as shd
+
+    fallback = dataclasses.replace(cfg, shard_map_ep=False)
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return apply(p, fallback, x, exec_cfg)
+    rules = shd.rules_for_mesh(mesh)
+    tp_axis = rules.get("tp")
+    dp_axis = rules.get("dp")
+    if not isinstance(tp_axis, str) or tp_axis not in mesh.shape:
+        return apply(p, fallback, x, exec_cfg)
+    tp = mesh.shape[tp_axis]
+    if cfg.n_experts % tp != 0:
+        return apply(p, fallback, x, exec_cfg)
+    e_local = cfg.n_experts // tp
+    dp_spec = dp_axis if isinstance(dp_axis, (str, tuple)) else None
+
+    a_bits = exec_cfg.policy.lookup("moe_expert").a_bits
+    has_shared = cfg.n_shared > 0
+    sh = p.get("shared", {})
+    fn = functools.partial(_local_moe, cfg, e_local, tp_axis,
+                           exec_mode=exec_cfg.mode, a_bits=a_bits,
+                           has_shared=has_shared)
+
+    in_specs = (P(dp_spec, None, None),            # x
+                P(None, None),                     # router
+                P(tp_axis, None, None),            # w_gate [E, d, f]
+                P(tp_axis, None, None),            # w_up
+                P(tp_axis, None, None),            # w_down [E, f, d]
+                P(None, tp_axis) if has_shared else P(),   # shared gate
+                P(None, tp_axis) if has_shared else P(),   # shared up
+                P(tp_axis, None) if has_shared else P())   # shared down
+    out_specs = (P(dp_spec, None, None), P())
+    y, aux = jax.shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(
+        x, p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"],
+        sh["w_gate"]["w"] if has_shared else jnp.zeros((), x.dtype),
+        sh["w_up"]["w"] if has_shared else jnp.zeros((), x.dtype),
+        sh["w_down"]["w"] if has_shared else jnp.zeros((), x.dtype))
+    return y, aux

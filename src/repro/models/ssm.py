@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train scan + decode.
+
+Implements the SSD algorithm (Dao & Gu 2024): within-chunk quadratic
+attention-like term + inter-chunk state recurrence, both as einsums over
+[B, n_chunks, chunk, H, ...] tensors, with a lax.scan carrying the
+[B, H, P, N] state across chunks. Decode is the O(1) recurrent update.
+
+Loom applicability (DESIGN.md §Arch-applicability): the in/out projections
+(the dominant FLOPs) flow through LoomLinear; the state recurrence itself
+stays fp32 — it is an evolving recurrence, not an inner product over
+stored weights, so the paper's weight-precision machinery does not apply
+to it (noted inapplicability).
+
+Sharding: heads over "tp"; B/C projections row-parallel (groups == 1, so
+their outputs are replicated); state tensors [B, H, P, N] sharded on H.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.dist.sharding import constraint
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init(key, cfg: SSMConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    p, s = {}, {}
+    p["in_x"], s["in_x"] = L.linear_init(ks[0], d, di, "fsdp", "tp", dtype)
+    p["in_z"], s["in_z"] = L.linear_init(ks[1], d, di, "fsdp", "tp", dtype)
+    p["in_B"], s["in_B"] = L.linear_init(ks[2], d, n, "tp", None, dtype)
+    p["in_C"], s["in_C"] = L.linear_init(ks[3], d, n, "tp", None, dtype)
+    p["in_dt"], s["in_dt"] = L.linear_init(ks[4], d, h, "tp", None, dtype)
+    p["conv"] = {"w": (jax.random.normal(ks[5], (cfg.d_conv, di), jnp.float32)
+                       * 0.2).astype(dtype)}
+    s["conv"] = {"w": PS(None, "tp")}
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32))
+    s["A_log"] = PS("tp")
+    p["D"] = jnp.ones((h,), jnp.float32)
+    s["D"] = PS("tp")
+    p["dt_bias"] = jnp.zeros((h,), jnp.float32)
+    s["dt_bias"] = PS("tp")
+    p["norm"], s["norm"] = L.norm_init(di, dtype)
+    p["out"], s["out"] = L.linear_init(ks[6], di, d, "tp", "fsdp", dtype)
+    return p, s
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1], :]
+        out = out + xi * w[i][None, None, :]
+    return out
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: L[i,j] = sum_{j<k<=i} a[k], -inf for j>i.
+
+    a: [..., T] -> [..., T, T]."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    l = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool), 0)
+    return jnp.where(mask, l, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward. x: [b, s, h, p]; dt: [b, s, h]; A: [h] (negative);
+    B, C: [b, s, n]. Returns (y [b,s,h,p], final_state [b,h,p,n])."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    c = s // chunk
+    xr = x.reshape(b, c, chunk, h, p)
+    dtr = dt.reshape(b, c, chunk, h)
+    Br = B.reshape(b, c, chunk, n)
+    Cr = C.reshape(b, c, chunk, n)
+
+    da = dtr * A[None, None, None, :]                    # [b,c,l,h] (negative)
+    da_cum = jnp.cumsum(da, axis=2)                      # within-chunk cumsum
+    da_tot = da_cum[:, :, -1, :]                         # [b,c,h]
+
+    # --- intra-chunk (quadratic within chunk) ---
+    Lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))    # [b,c,h,l,l]
+    att = jnp.einsum("bcin,bcjn,bchij->bchij", Cr, Br, Lmat)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", att, dtr, xr)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(da_tot[:, :, None, :] - da_cum)          # [b,c,l,h]
+    states = jnp.einsum("bcln,bclh,bclh,bclhp->bchpn",
+                        Br, dtr, decay_to_end, xr)                   # [b,c,h,p,n]
+
+    # --- inter-chunk recurrence ---
+    def step(h_prev, inp):
+        st, dtot = inp                                   # [b,h,p,n], [b,h]
+        h_new = h_prev * jnp.exp(dtot)[:, :, None, None] + st
+        return h_new, h_prev                             # emit state BEFORE chunk
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, h_prevs = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+                   da_tot.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # [b,c,h,p,n]
+
+    # --- inter-chunk output ---
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                         Cr, h_prevs.astype(Cr.dtype), jnp.exp(da_cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def _forward_full(p, cfg: SSMConfig, x: jax.Array, exec_cfg):
+    """Shared full-sequence path. Returns (out, conv_tail, final_state)."""
+    b, s, d = x.shape
+    h, pd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    xi = L.linear_apply(p["in_x"], x, exec_cfg, "ssm_x")
+    z = L.linear_apply(p["in_z"], x, exec_cfg, "ssm_z")
+    conv_tail = xi[:, s - (cfg.d_conv - 1):, :]     # raw conv input history
+    xi = _causal_conv(xi, p["conv"]["w"].astype(xi.dtype))
+    xi = jax.nn.silu(xi)
+    xi = constraint(xi, PS("dp", None, "tp"))
+    Bv = L.linear_apply(p["in_B"], x, exec_cfg, "ssm_B").astype(jnp.float32)
+    Cv = L.linear_apply(p["in_C"], x, exec_cfg, "ssm_C").astype(jnp.float32)
+    dt = jax.nn.softplus(
+        L.linear_apply(p["in_dt"], x, exec_cfg, "ssm_dt").astype(jnp.float32)
+        + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, s, h, pd).astype(jnp.float32)
+    y, final = ssd_chunked(xh, dt, A, Bv, Cv, cfg.chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, h * pd).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"]["g"])
+    return L.linear_apply(p["out"], y, exec_cfg, "ssm_out"), conv_tail, final
+
+
+def apply_train(p, cfg: SSMConfig, x: jax.Array, exec_cfg) -> jax.Array:
+    """Full-sequence forward. x: [B, S, d_model]."""
+    out, _, _ = _forward_full(p, cfg, x, exec_cfg)
+    return out
+
+
+def apply_prefill(p, cfg: SSMConfig, x: jax.Array, exec_cfg, cache: dict):
+    """Full forward + capture decode state (conv history + SSM state)."""
+    out, conv_tail, final = _forward_full(p, cfg, x, exec_cfg)
+    return out, {"conv": conv_tail.astype(cache["conv"].dtype),
+                 "state": final}
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) recurrent update with conv + ssm state.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: SSMConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           jnp.float32),
+    }
+
+
+def cache_specs(cfg: SSMConfig):
+    return {"conv": PS("dp", None, "tp"),
+            "state": PS("dp", "tp", None, None)}
+
+
+def apply_decode(p, cfg: SSMConfig, x: jax.Array, exec_cfg, cache: dict):
+    """One-token step. x: [B, 1, d_model] -> (y [B,1,d], cache)."""
+    b = x.shape[0]
+    h, pd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    xi = L.linear_apply(p["in_x"], x, exec_cfg, "ssm_x")[:, 0]    # [B, di]
+    z = L.linear_apply(p["in_z"], x, exec_cfg, "ssm_z")[:, 0]
+    conv_w = p["conv"]["w"].astype(xi.dtype)                      # [K, di]
+    hist = cache["conv"]                                          # [B, K-1, di]
+    window = jnp.concatenate([hist, xi[:, None, :]], axis=1)      # [B, K, di]
+    xc = jnp.einsum("bkc,kc->bc", window, conv_w)
+    xc = jax.nn.silu(xc)
+    new_conv = window[:, 1:, :]
+
+    Bv = L.linear_apply(p["in_B"], x, exec_cfg, "ssm_B")[:, 0].astype(jnp.float32)
+    Cv = L.linear_apply(p["in_C"], x, exec_cfg, "ssm_C")[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        L.linear_apply(p["in_dt"], x, exec_cfg, "ssm_dt")[:, 0].astype(jnp.float32)
+        + p["dt_bias"][None, :])                                  # [B, h]
+    A = -jnp.exp(p["A_log"])                                      # [h]
+    xh = xc.reshape(b, h, pd).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A[None, :])                              # [B, h]
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bv)
+    y = jnp.einsum("bn,bhpn->bhp", Cv, state) + xh * p["D"][None, :, None]
+    y = y.reshape(b, h * pd).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"]["g"])
+    out = L.linear_apply(p["out"], y[:, None, :], exec_cfg, "ssm_out")
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm, clip_by_global_norm)
+from repro.optim.schedule import Schedule, make_schedule
+from repro.optim.compression import (CompressionConfig, compress_state_init,
+                                     compressed_gradient)

@@ -1,0 +1,86 @@
+"""Gradient compression — Loom's precision lever applied to collectives.
+
+The paper's thesis is that every bit of unneeded precision is wasted
+bandwidth. For multi-pod training the scarcest bandwidth is the cross-pod
+(DCN / optical) gradient reduction, so we compress exactly that hop:
+
+  * ``compressed_gradient``: error-feedback int-k quantization of gradient
+    leaves (Seide et al. 1-bit SGD generalized to k bits). The residual
+    (quantization error) is carried in optimizer-side state and added back
+    the next step, so the compression bias vanishes to first order.
+    Value-level transform — composes with any pjit sharding.
+
+  * ``compressed_psum``: an explicit shard_map collective for the pod axis:
+    each pod quantizes its local gradient shard to int8 (+f32 scale),
+    all-gathers the small tensors over "pod", and dequant-sums locally.
+    Bytes on the cross-pod link drop 4x vs fp32 (2x vs bf16) at the cost
+    of one extra scale per leaf. Used by launch/train.py when
+    ``--compress-pod-reduce`` is set; the roofline collective term of the
+    pod axis scales accordingly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8
+    enabled: bool = False
+    error_feedback: bool = True
+
+
+def compress_state_init(params):
+    """Residual (error-feedback) buffers, one per gradient leaf, bf16."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def _quant_dequant(g32: jax.Array, bits: int) -> jax.Array:
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / qmax
+    q = jnp.clip(jnp.round(g32 / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+def compressed_gradient(grads, err_state, cfg: CompressionConfig):
+    """Error-feedback quantize->dequantize each leaf. Returns (grads, err)."""
+    if not cfg.enabled:
+        return grads, err_state
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        gq = _quant_dequant(g32, cfg.bits)
+        new_e = (g32 - gq).astype(e.dtype) if cfg.error_feedback else e
+        return gq.astype(g.dtype), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def compressed_psum(tree, axis_name: str, bits: int = 8):
+    """Int-k all-reduce over ``axis_name`` — call inside shard_map.
+
+    Implementation: quantize local value per-leaf (abs-max scale), all-gather
+    int8 payloads + scales over the axis, dequantize and sum. Exact-sum of
+    the quantized values; error bounded by one quantization step per member.
+    """
+    qmax = (1 << (bits - 1)) - 1
+
+    def one(x):
+        x32 = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-30) / qmax
+        q = jnp.clip(jnp.round(x32 / scale), -qmax - 1, qmax).astype(jnp.int8)
+        qs = jax.lax.all_gather(q, axis_name)                    # [P, ...] int8
+        ss = jax.lax.all_gather(scale, axis_name)                # [P]
+        shape = (-1,) + (1,) * x.ndim
+        return jnp.sum(qs.astype(jnp.float32) * ss.reshape(shape),
+                       axis=0).astype(x.dtype)
+
+    return jax.tree.map(one, tree)

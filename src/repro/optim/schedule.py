@@ -1,0 +1,33 @@
+"""LR schedules: linear warmup + cosine/linear decay, as pure jnp functions
+of the step counter (jit-safe, resumable — no Python-side state)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_ratio: float = 0.1
+    kind: str = "cosine"             # "cosine" | "linear" | "constant"
+
+
+def make_schedule(cfg: Schedule):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = cfg.peak_lr * jnp.minimum(1.0, (s + 1.0) / max(1, cfg.warmup_steps))
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        if cfg.kind == "cosine":
+            decay = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * (
+                1.0 + jnp.cos(jnp.pi * frac))
+        elif cfg.kind == "linear":
+            decay = cfg.min_ratio + (1 - cfg.min_ratio) * (1.0 - frac)
+        else:
+            decay = 1.0
+        return jnp.where(s < cfg.warmup_steps, warm, cfg.peak_lr * decay)
+    return lr

@@ -1,0 +1,46 @@
+"""CLI integration: the launchers run end-to-end as a user would invoke
+them (subprocesses, CPU-scale smoke configs)."""
+import os
+import subprocess
+import sys
+
+ENV = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+       "HOME": os.environ.get("HOME", "/root")}
+
+
+def _run(args, timeout=560):
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, cwd=".", env=ENV, timeout=timeout)
+
+
+def test_train_cli_smoke(tmp_path):
+    r = _run(["-m", "repro.launch.train", "--arch", "qwen3-1.7b",
+              "--steps", "6", "--batch", "2", "--seq", "32",
+              "--ckpt-dir", str(tmp_path), "--ckpt-every", "3"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done" in r.stdout
+    assert "loss" in r.stdout
+
+
+def test_train_cli_qat_mode():
+    r = _run(["-m", "repro.launch.train", "--arch", "qwen3-1.7b",
+              "--steps", "3", "--batch", "2", "--seq", "32",
+              "--mode", "fake_quant", "--a-bits", "8", "--w-bits", "8"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done" in r.stdout
+
+
+def test_serve_cli_int8():
+    r = _run(["-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
+              "--mode", "serve_int8", "--batch", "2", "--prompt-len", "8",
+              "--gen-len", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "generated" in r.stdout and "done" in r.stdout
+
+
+def test_serve_cli_packed():
+    r = _run(["-m", "repro.launch.serve", "--arch", "mixtral-8x7b",
+              "--mode", "serve_packed", "--batch", "2", "--prompt-len", "8",
+              "--gen-len", "3"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done" in r.stdout

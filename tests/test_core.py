@@ -1,0 +1,180 @@
+"""Unit + property tests for the Loom core (quantize/bitpack/engine/dynamic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack, dynamic, engine, quantize as q
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 7, 8, 11, 16])
+def test_quantize_range_and_roundtrip(bits):
+    x = rand((32, 16), seed=bits)
+    xq, s = q.quantize(x, bits)
+    assert int(jnp.max(xq)) <= q.qmax(bits)
+    assert int(jnp.min(xq)) >= q.qmin(bits)
+    err = jnp.max(jnp.abs(q.dequantize(xq, s) - x))
+    assert float(err) <= float(jnp.max(s)) * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("bits", [2, 3, 8, 12, 16])
+def test_bit_planes_exact(bits):
+    xq, _ = q.quantize(rand((8, 8), seed=bits), bits)
+    planes = q.bit_planes(xq, bits)
+    w = q.plane_weights(bits).reshape((bits, 1, 1))
+    rec = jnp.sum(planes.astype(jnp.int32) * w, axis=0)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(xq))
+
+
+@pytest.mark.parametrize("bits,pw", [(8, 1), (8, 2), (8, 4), (8, 8), (11, 4), (7, 3), (16, 8)])
+def test_group_planes_exact(bits, pw):
+    xq, _ = q.quantize(rand((16, 8), seed=bits * pw), bits)
+    planes, ws = q.group_planes(xq, bits, pw)
+    rec = jnp.sum(planes * ws.reshape((-1, 1, 1)), axis=0)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(xq))
+
+
+@given(st.integers(min_value=-(2 ** 15), max_value=2 ** 15 - 1),
+       st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=60, deadline=None)
+def test_group_planes_scalar_property(v, pw):
+    """Property: any 16-bit value reconstructs exactly from its planes."""
+    xq = jnp.asarray([[v]], dtype=jnp.int32)
+    planes, ws = q.group_planes(xq, 16, pw)
+    rec = int(jnp.sum(planes * ws.reshape((-1, 1, 1)), axis=0)[0, 0])
+    assert rec == v
+
+
+def test_fake_quant_ste_gradient():
+    x = rand((4, 4))
+    g = jax.grad(lambda t: jnp.sum(q.fake_quant(t, 8) * 2.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 2.0 * np.ones((4, 4)), rtol=1e-6)
+
+
+def test_effective_bits_leading_one():
+    xq = jnp.asarray([0, 1, 2, 3, 4, 127, 128, -128], dtype=jnp.int32)
+    eb = q.effective_bits(xq, axis=None)
+    # max|x| = 128 -> 8 magnitude bits + sign = 9
+    assert int(eb) == 9
+
+
+# ---------------------------------------------------------------------------
+# bitpack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [1, 7, 11, 16])
+def test_pack_unpack_roundtrip(bits):
+    wq, _ = q.quantize(rand((64, 24), seed=bits), bits)
+    packed = bitpack.pack_weights(wq, bits)
+    assert packed.shape == (bits, 8, 24)
+    np.testing.assert_array_equal(np.asarray(bitpack.unpack_weights(packed, bits)),
+                                  np.asarray(wq))
+
+
+def test_packed_footprint_matches_paper_law():
+    # Memory scales as P/16 of the 16-bit baseline (paper Sec 3.2).
+    for bits in (4, 8, 11, 13):
+        ratio = bitpack.packed_nbytes((128, 64), bits) / bitpack.baseline_nbytes((128, 64))
+        assert abs(ratio - bits / 16) < 1e-9
+
+
+@given(st.integers(min_value=1, max_value=16))
+@settings(max_examples=16, deadline=None)
+def test_pack_axis_roundtrip_property(k8):
+    rng = np.random.default_rng(k8)
+    bits01 = jnp.asarray(rng.integers(0, 2, size=(3, k8 * 8, 5)).astype(np.uint8))
+    packed = bitpack.pack_bits_along_axis(bits01, axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(bitpack.unpack_bits_along_axis(packed, axis=1)), np.asarray(bits01))
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["serial_both", "serial_weights"])
+@pytest.mark.parametrize("pb", [1, 2, 4, 8])
+@pytest.mark.parametrize("a_bits,w_bits", [(8, 8), (7, 11), (5, 12), (16, 16)])
+def test_plane_matmul_exact(mode, pb, a_bits, w_bits):
+    if a_bits == 16 and w_bits == 16 and pb == 1:
+        pytest.skip("256 1b passes — covered by pb>=2")
+    xq, _ = q.quantize(rand((6, 32), seed=1), a_bits)
+    wq, _ = q.quantize(rand((32, 10), seed=2), w_bits)
+    cfg = engine.LoomConfig(a_bits=a_bits, w_bits=w_bits, a_plane_bits=pb,
+                            w_plane_bits=pb, mode=mode)
+    y = engine.plane_matmul(xq, wq, cfg)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(engine.reference_int_matmul(xq, wq)))
+
+
+def test_loom_matmul_close_to_dense():
+    x, w = rand((8, 64), 3), rand((64, 16), 4, scale=0.1)
+    cfg = engine.LoomConfig(a_bits=8, w_bits=8, a_plane_bits=4, w_plane_bits=4)
+    y = engine.loom_matmul(x, w, cfg)
+    ref = x @ w
+    # 8-bit quantization error bound: rtol loose, atol from scales
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=0.15, rtol=0.1)
+
+
+def test_split_k_cascading_exact():
+    xq, _ = q.quantize(rand((4, 64), 5), 7)
+    wq, _ = q.quantize(rand((64, 6), 6), 9)
+    cfg = engine.LoomConfig(a_bits=7, w_bits=9, a_plane_bits=4, w_plane_bits=4)
+    for n in (2, 4, 8):
+        y = engine.split_k_matmul(xq, wq, cfg, n)
+        np.testing.assert_array_equal(np.asarray(y),
+                                      np.asarray(engine.reference_int_matmul(xq, wq)))
+
+
+def test_speedup_laws():
+    # CVL law 256/(Pa*Pw); FCL law 16/Pw (paper Sec 2).
+    c = engine.LoomConfig(a_bits=8, w_bits=8, a_plane_bits=1, w_plane_bits=1)
+    assert abs(c.speedup_vs_base() - 256 / 64) < 1e-9
+    f = engine.LoomConfig(a_bits=16, w_bits=8, w_plane_bits=1, mode="serial_weights")
+    assert abs(f.speedup_vs_base() - 2.0) < 1e-9
+
+
+@given(st.integers(2, 8), st.integers(2, 12), st.sampled_from([1, 2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_plane_matmul_property(a_bits, w_bits, pb):
+    """Property: plane-serial == integer matmul for random precisions."""
+    rng = np.random.default_rng(a_bits * 100 + w_bits * 10 + pb)
+    xq = jnp.asarray(rng.integers(q.qmin(a_bits), q.qmax(a_bits) + 1, size=(3, 16)), dtype=jnp.int32)
+    wq = jnp.asarray(rng.integers(q.qmin(w_bits), q.qmax(w_bits) + 1, size=(16, 5)), dtype=jnp.int32)
+    cfg = engine.LoomConfig(a_bits=a_bits, w_bits=w_bits, a_plane_bits=pb, w_plane_bits=pb)
+    np.testing.assert_array_equal(
+        np.asarray(engine.plane_matmul(xq, wq, cfg)),
+        np.asarray(engine.reference_int_matmul(xq, wq)))
+
+
+# ---------------------------------------------------------------------------
+# dynamic precision reduction
+# ---------------------------------------------------------------------------
+
+def test_group_effective_bits():
+    xq = jnp.concatenate([jnp.full((256,), 3, jnp.int32),      # needs 3 bits
+                          jnp.full((256,), 100, jnp.int32)])   # needs 8 bits
+    eff = dynamic.group_effective_bits(xq, 256)
+    assert eff.shape == (2,)
+    assert int(eff[0]) == 3 and int(eff[1]) == 8
+
+
+def test_dynamic_stats_savings():
+    rng = np.random.default_rng(0)
+    # heterogeneous groups: half the groups are tiny -> dynamic trim wins
+    x = (rng.normal(size=4096) * 4).astype(np.float32)
+    x[:2048] *= 0.001
+    xq, _ = q.quantize(jnp.asarray(x), 16)
+    stats = dynamic.dynamic_stats(xq, 16, 256)
+    assert float(stats["plane_fraction_executed"]) < 0.85

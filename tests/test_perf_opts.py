@@ -1,0 +1,178 @@
+"""Correctness of the §Perf optimization paths: every hillclimb toggle must
+be numerically equivalent (or within quantization tolerance) to the
+baseline it replaces — speedups that break the model don't count."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention as A, layers as L, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ref_attn(q, k, v, causal=True, window=None):
+    b, s, h, d = q.shape
+    qt = q.transpose(0, 2, 1, 3).astype(jnp.float32) * d ** -0.5
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qt, kt)
+    qp, kp = jnp.arange(s), jnp.arange(k.shape[1])
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= kp[None, :] > qp[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vt).transpose(0, 2, 1, 3) \
+        .astype(q.dtype)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_vjp_matches_autodiff(causal, window):
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.normal(size=(2, 128, 4, 16)), jnp.float32)
+               for _ in range(3))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(_ref_attn(q, k, v, causal, window)))
+
+    def f_flash(q, k, v):
+        return jnp.sum(jnp.sin(
+            A.flash_attention_xla(q, k, v, causal, window, 32, 32)))
+
+    o_ref = _ref_attn(q, k, v, causal, window)
+    o_fl = A.flash_attention_xla(q, k, v, causal, window, 32, 32)
+    np.testing.assert_allclose(np.asarray(o_fl), np.asarray(o_ref),
+                               atol=2e-5)
+    g_ref = jax.grad(f_ref, (0, 1, 2))(q, k, v)
+    g_fl = jax.grad(f_flash, (0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_fl):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=3e-5)
+
+
+def _mk_attn_cfg(**kw):
+    return A.AttnConfig(d_model=64, n_heads=8, n_kv_heads=2, d_head=16,
+                        **kw)
+
+
+def _random_cache(cfg, b, s_cache, n_filled, seed=0):
+    rng = np.random.default_rng(seed)
+    cache = A.init_cache(cfg, b, s_cache)
+    k = jnp.asarray(rng.normal(size=cache["k"].shape), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=cache["v"].shape), jnp.bfloat16)
+    slot = jnp.where(jnp.arange(s_cache) < n_filled,
+                     jnp.arange(s_cache), -1).astype(jnp.int32)
+    return {"k": k, "v": v, "slot_pos": slot}
+
+
+def test_gqa_decode_equals_repeat_decode():
+    """The grouped (no-repeat) decode attention == the repeat path."""
+    base = _mk_attn_cfg()
+    gqa = _mk_attn_cfg(gqa_decode=True)
+    cache = _random_cache(base, b=3, s_cache=64, n_filled=40)
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(3, 1, 8, 16)), jnp.bfloat16)
+    pos = jnp.asarray(39, jnp.int32)
+    o1 = A.decode_attend(q, cache, base, pos)
+    o2 = A.decode_attend(q, cache, gqa, pos)
+    np.testing.assert_allclose(np.asarray(o2, np.float32),
+                               np.asarray(o1, np.float32), atol=2e-2)
+
+
+def test_gqa_decode_windowed():
+    base = _mk_attn_cfg(window=16)
+    gqa = _mk_attn_cfg(window=16, gqa_decode=True)
+    # SWA ring cache of size 16; slot i holds absolute position 16 + i
+    rng0 = np.random.default_rng(5)
+    cache = A.init_cache(base, 2, 64)
+    cache = {"k": jnp.asarray(rng0.normal(size=cache["k"].shape), jnp.bfloat16),
+             "v": jnp.asarray(rng0.normal(size=cache["v"].shape), jnp.bfloat16),
+             "slot_pos": (jnp.arange(16) + 16).astype(jnp.int32)}
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 1, 8, 16)), jnp.bfloat16)
+    pos = jnp.asarray(31, jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(A.decode_attend(q, cache, gqa, pos), np.float32),
+        np.asarray(A.decode_attend(q, cache, base, pos), np.float32),
+        atol=2e-2)
+
+
+@pytest.mark.parametrize("kv_bits", [16, 8])
+def test_mask_cache_update_equals_dus(kv_bits):
+    """where()-based cache writes == dynamic_update_slice writes."""
+    base = _mk_attn_cfg(kv_cache_bits=kv_bits)
+    masked = _mk_attn_cfg(kv_cache_bits=kv_bits, mask_cache_update=True)
+    rng = np.random.default_rng(3)
+    c1 = A.init_cache(base, 2, 32)
+    c2 = jax.tree.map(lambda x: x, c1)
+    for step in range(5):
+        kn = jnp.asarray(rng.normal(size=(2, 1, 2, 16)), jnp.bfloat16)
+        vn = jnp.asarray(rng.normal(size=(2, 1, 2, 16)), jnp.bfloat16)
+        pos = jnp.asarray(step, jnp.int32)
+        c1 = A.cache_update(c1, base, kn, vn, pos)
+        c2 = A.cache_update(c2, masked, kn, vn, pos)
+    for key in c1:
+        np.testing.assert_allclose(
+            np.asarray(c1[key], np.float32), np.asarray(c2[key], np.float32),
+            atol=0, rtol=0, err_msg=key)
+
+
+def test_ring_cache_mask_update_wraps():
+    """SWA ring cache: mask update wraps at window size like the DUS path."""
+    base = _mk_attn_cfg(window=8)
+    masked = _mk_attn_cfg(window=8, mask_cache_update=True)
+    rng = np.random.default_rng(4)
+    c1 = A.init_cache(base, 1, 64)
+    c2 = jax.tree.map(lambda x: x, c1)
+    assert c1["k"].shape[1] == 8   # ring sized to the window
+    for step in range(13):         # wraps past the ring boundary
+        kn = jnp.asarray(rng.normal(size=(1, 1, 2, 16)), jnp.bfloat16)
+        vn = jnp.asarray(rng.normal(size=(1, 1, 2, 16)), jnp.bfloat16)
+        c1 = A.cache_update(c1, base, kn, vn, jnp.asarray(step, jnp.int32))
+        c2 = A.cache_update(c2, masked, kn, vn, jnp.asarray(step, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(c1["slot_pos"]),
+                                  np.asarray(c2["slot_pos"]))
+    np.testing.assert_allclose(np.asarray(c1["k"], np.float32),
+                               np.asarray(c2["k"], np.float32))
+
+
+def test_flash_vjp_full_model_grads_close():
+    """End-to-end: qwen3 smoke with flash_vjp grads ~= baseline grads."""
+    import dataclasses as dc
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    cfg_f = dc.replace(cfg, flash_vjp=True)
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)),
+                                   jnp.int32)}
+    ec = L.ExecConfig(mode="dense")
+
+    g1 = jax.grad(lambda p: M.loss_fn(p, cfg, batch, ec)[0])(params)
+    g2 = jax.grad(lambda p: M.loss_fn(p, cfg_f, batch, ec)[0])(params)
+    l1, l2 = jax.tree.leaves(g1), jax.tree.leaves(g2)
+    for a, b in zip(l1, l2):
+        na = np.asarray(a, np.float32)
+        nb = np.asarray(b, np.float32)
+        denom = max(np.abs(na).max(), 1e-6)
+        assert np.abs(na - nb).max() / denom < 0.05
+
+
+def test_kv_col_parallel_same_math():
+    """kv_col_parallel only changes sharding specs, not values."""
+    import dataclasses as dc
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    cfg_k = dc.replace(cfg, kv_col_parallel=True)
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    ec = L.ExecConfig(mode="dense")
+    o1, _ = M.forward_train(params, cfg, toks, ec)
+    o2, _ = M.forward_train(params, cfg_k, toks, ec)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=1e-3)

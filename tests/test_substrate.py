@@ -1,0 +1,231 @@
+"""Substrate tests: optimizer, schedule, compression, data pipeline,
+checkpointing, supervisor (fault tolerance)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import (CheckpointManager, latest_step, restore_checkpoint,
+                        save_checkpoint)
+from repro.data import DataConfig, host_shard_batch, make_iterator, synthetic_batch
+from repro.optim import (AdamWConfig, CompressionConfig, Schedule, adamw_init,
+                         adamw_update, compress_state_init,
+                         compressed_gradient, global_norm, make_schedule)
+from repro.runtime import StepMonitor, Supervisor, TransientWorkerError
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=100.0)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw_init(params, cfg)
+    target = jnp.array([1.0, 2.0, 3.0])
+    for _ in range(300):
+        g = {"w": params["w"] - target}
+        params, opt, _ = adamw_update(params, g, opt, cfg, jnp.asarray(0.05))
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_grad_clip_and_metrics():
+    cfg = AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params, cfg)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = adamw_update(params, g, opt, cfg, jnp.asarray(1e-3))
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_adamw_bf16_moments():
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    opt = adamw_init(params, cfg)
+    assert opt["mu"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    p2, opt2, _ = adamw_update(params, g, opt, cfg, jnp.asarray(1e-2))
+    assert opt2["nu"]["w"].dtype == jnp.bfloat16
+    assert bool(jnp.all(p2["w"] < params["w"]))
+
+
+def test_schedule_shapes():
+    sched = make_schedule(Schedule(peak_lr=1.0, warmup_steps=10,
+                                   total_steps=100, min_ratio=0.1))
+    lrs = [float(sched(jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6          # warmup ascends
+    assert abs(lrs[10] - 1.0) < 0.01               # peak after warmup
+    assert lrs[99] == pytest.approx(0.1, abs=0.02)  # decays to min_ratio
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_unbiased():
+    """With error feedback, the SUM of compressed gradients over time tracks
+    the sum of true gradients (bias vanishes)."""
+    cfg = CompressionConfig(bits=4, enabled=True)
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    err = compress_state_init({"g": g_true})
+    acc = jnp.zeros((64,))
+    n = 50
+    for _ in range(n):
+        cg, err = compressed_gradient({"g": g_true}, err, cfg)
+        acc = acc + cg["g"]
+    rel = float(jnp.linalg.norm(acc / n - g_true) / jnp.linalg.norm(g_true))
+    assert rel < 0.02, rel
+
+
+def test_compression_disabled_identity():
+    cfg = CompressionConfig(enabled=False)
+    g = {"g": jnp.arange(8.0)}
+    err = compress_state_init(g)
+    cg, err2 = compressed_gradient(g, err, cfg)
+    np.testing.assert_array_equal(np.asarray(cg["g"]), np.asarray(g["g"]))
+
+
+@given(st.integers(2, 8))
+@settings(max_examples=8, deadline=None)
+def test_compression_error_bounded(bits):
+    cfg = CompressionConfig(bits=bits, enabled=True, error_feedback=False)
+    rng = np.random.default_rng(bits)
+    g = {"g": jnp.asarray(rng.normal(size=(128,)), jnp.float32)}
+    err = compress_state_init(g)
+    cg, _ = compressed_gradient(g, err, cfg)
+    step = float(jnp.max(jnp.abs(g["g"]))) / ((1 << (bits - 1)) - 1)
+    assert float(jnp.max(jnp.abs(cg["g"] - g["g"]))) <= step * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=4)
+    b1 = synthetic_batch(cfg, step=7)
+    b2 = synthetic_batch(cfg, step=7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    it = make_iterator(cfg, start_step=7)
+    step, b3 = next(it)
+    assert step == 7
+    np.testing.assert_array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8)
+    full = synthetic_batch(cfg, step=3)
+    parts = [host_shard_batch(cfg, 3, h, 4) for h in range(4)]
+    got = np.concatenate([p["tokens"] for p in parts])
+    np.testing.assert_array_equal(full["tokens"], got)
+
+
+def test_data_labels_shift():
+    cfg = DataConfig(vocab=50, seq_len=16, global_batch=2)
+    b = synthetic_batch(cfg, 0)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+    # labels are the next-token stream of the same packed row
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _state():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def test_checkpoint_roundtrip_with_bf16():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 10, _state())
+        assert latest_step(d) == 10
+        restored, step = restore_checkpoint(d, 10, _state())
+        assert step == 10
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.arange(6.0).reshape(2, 3))
+        assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_bf16_compressed_storage():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _state(), compress="bf16")
+        restored, _ = restore_checkpoint(d, 1, _state())
+        assert restored["params"]["w"].dtype == jnp.float32  # logical dtype
+        np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                                   np.arange(6.0).reshape(2, 3), rtol=1e-2)
+
+
+def test_checkpoint_manager_retention_and_async():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, every=1, keep_n=2)
+        for s in (1, 2, 3, 4):
+            mgr.save_async(s, _state())
+        mgr.wait()
+        steps = sorted(int(p.split("_")[1]) for p in os.listdir(d))
+        assert steps == [3, 4]
+        restored, step = mgr.restore_latest(_state())
+        assert step == 4
+
+
+def test_checkpoint_atomic_no_partial():
+    """A .tmp dir left by a crash is ignored by latest_step."""
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, _state())
+        os.makedirs(os.path.join(d, "step_00000009.tmp"))
+        assert latest_step(d) == 5
+
+
+# ---------------------------------------------------------------------------
+# Supervisor (fault tolerance / stragglers / spikes)
+# ---------------------------------------------------------------------------
+
+def test_supervisor_restart_on_worker_failure():
+    saved = {}
+    fail_once = {"armed": True}
+
+    def step_fn(state, idx):
+        if idx == 5 and fail_once["armed"]:
+            fail_once["armed"] = False
+            raise TransientWorkerError("boom")
+        return state + 1, 1.0
+
+    def save_fn(step, state):
+        saved["state"], saved["step"] = state, step
+
+    def restore_fn():
+        return saved.get("state"), saved.get("step")
+
+    sup = Supervisor(step_fn=step_fn, save_fn=save_fn, restore_fn=restore_fn,
+                     save_every=2)
+    final, run = sup.train(0, 10)
+    assert run.n_restarts == 1
+    assert final == 10  # every step applied exactly once
+
+
+def test_supervisor_spike_guard():
+    def step_fn(state, idx):
+        loss = 1.0 if idx != 6 else 1e6      # poisoned batch
+        return state + 1, loss
+
+    sup = Supervisor(step_fn=step_fn, save_fn=lambda *_: None,
+                     restore_fn=lambda: (None, None), spike_factor=10.0)
+    _, run = sup.train(0, 10)
+    assert run.n_skipped_spikes == 1
+
+
+def test_step_monitor_flags_stragglers():
+    mon = StepMonitor(k_sigma=3.0, warmup=5)
+    flagged = [mon.observe(1.0 + 0.01 * (i % 3)) for i in range(20)]
+    assert not any(flagged)
+    assert mon.observe(10.0)  # a 10x step is a straggler
