@@ -1,0 +1,12 @@
+# Tier-1 verification and benchmarks. conftest.py already prepends src/ to
+# sys.path, so pytest needs no PYTHONPATH; the benchmarks are plain scripts
+# and still want it.
+PY ?= python
+
+.PHONY: test bench
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PY) benchmarks/kernelbench.py

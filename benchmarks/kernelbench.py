@@ -1,4 +1,4 @@
-"""Kernel-level microbenchmark: the Loom bit-serial matmul's byte/FLOP law.
+"""Kernel-level microbenchmark: the Loom bit-serial byte/FLOP laws.
 
 On this CPU container wall-time of interpret-mode Pallas is meaningless;
 what IS meaningful (and what the paper claims) is how the WORK and the
@@ -6,17 +6,42 @@ BYTES scale with precision. We verify, per (Pa, Pw):
 
   * packed weight bytes == Pw/16 x bf16 baseline   (paper's storage law)
   * plane-pass count    == ceil(Pa/ba) x ceil(Pw/bw)  (paper's cycle law)
-  * XLA path wall-time on CPU for the serial engine, as a sanity trend.
+  * XLA path wall-time on CPU for the batched plane engine, as a trend.
 
-Also times the dense bf16 path (the DPNN-equivalent) for reference.
+And for the FUSED CONV path (the CVL law end-to-end):
+
+  * fused activation HBM bytes == the raw padded map — NO im2col patch
+    buffer (the legacy lowering moved Ho*Wo*k*k*C patch elements, a
+    ~k^2 activation blowup that inverted the bandwidth law)
+  * packed conv weight bytes == Pw/16 x bf16, K rows = ceil(k*k*C/8)*8
+  * wall-time of fused vs legacy im2col serve_packed conv on CPU.
+
+Every jitted callable is bound with functools.partial (a lambda closing
+over the loop variable would retrace — and silently time — the LAST
+config only). Results are written machine-readable to BENCH_kernel.json
+{config -> {us, passes, bytes...}} so the perf trajectory is tracked
+across PRs.
 """
+import argparse
+import functools
+import json
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitpack, engine, quantize as q
+from repro.kernels import ops
+
+BATCH_ENGINE_NOTE = (
+    "plane_matmul = ONE canonical 2D GEMM [na*M,K]@[K,nw*N] over all "
+    "stacked plane pairs (lax.scan removed this PR)")
 
 
 def _time(f, *args, n=5):
@@ -28,18 +53,24 @@ def _time(f, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main():
+def _dense(a, b):
+    return a.astype(jnp.bfloat16) @ b.astype(jnp.bfloat16)
+
+
+def bench_matmul(results):
     m, k, n = 256, 1024, 512
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
 
-    dense = jax.jit(lambda a, b: a.astype(jnp.bfloat16) @ b.astype(jnp.bfloat16))
-    t_dense = _time(dense, x, w)
+    t_dense = _time(jax.jit(_dense), x, w)
     base_bytes = bitpack.baseline_nbytes((k, n))
     print("== kernel bench: Loom bit-serial matmul laws ==")
+    print(f"  ({BATCH_ENGINE_NOTE})")
     print(f"  dense bf16 {m}x{k}x{n}: {t_dense:8.1f} us   "
           f"weight bytes {base_bytes}")
+    results["dense_bf16"] = {"us": t_dense, "passes": 1,
+                             "weight_bytes": base_bytes}
 
     for pa, pw, ba, bw in ((8, 8, 1, 1), (8, 8, 2, 2), (8, 8, 4, 4),
                            (8, 8, 8, 8), (4, 4, 1, 1), (16, 16, 8, 8),
@@ -47,17 +78,105 @@ def main():
         cfg = engine.LoomConfig(a_bits=pa, w_bits=pw, a_plane_bits=ba,
                                 w_plane_bits=bw)
         wq, ws = q.quantize(w, pw)
-        packed = bitpack.pack_weights(wq, pw)
         pbytes = bitpack.packed_nbytes((k, n), pw)
-        f = jax.jit(lambda a: engine.loom_matmul(a, w, cfg, w_scale=ws, wq=wq))
+        # functools.partial, NOT a lambda: binds THIS config's cfg/wq/ws.
+        f = jax.jit(functools.partial(engine.loom_matmul, w=w, cfg=cfg,
+                                      w_scale=ws, wq=wq))
         t = _time(f, x)
         passes = cfg.n_a_planes * cfg.n_w_planes
+        law = -(-pa // ba) * -(-pw // bw)
         print(f"  LM ba={ba} bw={bw} Pa={pa:2d} Pw={pw:2d}: {t:8.1f} us   "
-              f"passes {passes:3d} (law {-(-pa // ba) * -(-pw // bw):3d})   "
+              f"passes {passes:3d} (law {law:3d})   "
               f"bytes {pbytes} = {pbytes / base_bytes:.3f}x base "
               f"(law {pw / 16:.3f})")
-        assert passes == -(-pa // ba) * -(-pw // bw)
+        assert passes == law
         assert pbytes == int(base_bytes * pw / 16)
+        results[f"lm_pa{pa}_pw{pw}_ba{ba}_bw{bw}"] = {
+            "us": t, "passes": passes, "weight_bytes": pbytes,
+            "weight_bytes_vs_base": pbytes / base_bytes}
+
+
+def _serve_packed_params(wq_f32, pw):
+    wq, ws = q.quantize(wq_f32, pw)
+    return bitpack.pack_weights(wq, pw), ws
+
+
+def _conv_im2col_serve(x, w_packed, w_scale, kernel, stride, a_bits):
+    """The legacy lowering: materialize the HBM patch tensor, then the
+    bit-serial matmul — benchmarked as the A/B baseline."""
+    b, h, w_, c = x.shape
+    pad = kernel // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = []
+    for di in range(kernel):
+        for dj in range(kernel):
+            cols.append(xp[:, di:di + h:stride, dj:dj + w_:stride, :])
+    patches = jnp.concatenate(cols, axis=-1)
+    return ops.loom_linear_serve(
+        patches, w_packed, w_scale, a_bits=a_bits,
+        w_bits=w_packed.shape[0], use_pallas=False)
+
+
+def bench_conv(results):
+    print("== fused bit-serial conv: CVL bandwidth law ==")
+    rng = np.random.default_rng(1)
+    b = 8
+    for name, h, c, n, kernel, stride, pa, pw in (
+            ("conv_32x32x3_k3", 32, 3, 32, 3, 1, 8, 8),
+            ("conv_16x16x32_k3", 16, 32, 64, 3, 1, 8, 8),
+            ("conv_16x16x32_k3_s2", 16, 32, 64, 3, 2, 8, 8),
+            ("conv_8x8x64_k5", 8, 64, 128, 5, 1, 8, 11)):
+        x = jnp.asarray(rng.normal(size=(b, h, h, c)), jnp.float32)
+        kkc = kernel * kernel * c
+        wf = jnp.asarray(rng.normal(size=(kkc, n)), jnp.float32)
+        w_packed, ws = _serve_packed_params(wf, pw)
+
+        fused = jax.jit(functools.partial(
+            ops.loom_conv_serve, w_packed=w_packed, w_scale=ws,
+            kernel=kernel, stride=stride, a_bits=pa))
+        legacy = jax.jit(functools.partial(
+            _conv_im2col_serve, w_packed=w_packed, w_scale=ws,
+            kernel=kernel, stride=stride, a_bits=pa))
+        t_fused = _time(fused, x)
+        t_legacy = _time(legacy, x)
+
+        ho = wo = -(-h // stride)
+        pad = kernel // 2
+        act_bytes_fused = b * (h + 2 * pad) ** 2 * c          # raw int8 map
+        patch_bytes = b * ho * wo * kkc                       # legacy buffer
+        wbytes = int(np.prod(w_packed.shape))
+        wbase = bitpack.baseline_nbytes((kkc, n))
+        k8 = -(-kkc // 8) * 8
+        print(f"  {name}: fused {t_fused:8.1f} us  im2col {t_legacy:8.1f} us "
+              f"({t_legacy / t_fused:4.2f}x)   act bytes {act_bytes_fused} "
+              f"vs patch buffer {patch_bytes} ({patch_bytes / act_bytes_fused:.1f}x)   "
+              f"w bytes {wbytes} = {wbytes / wbase:.3f}x base (law {pw / 16:.3f}, "
+              f"K rows {kkc}->{k8})")
+        # Pw/16 law on the PADDED K rows (pack_weights zero-pads K%8):
+        assert wbytes == pw * (k8 // 8) * n
+        results[name] = {
+            "us": t_fused, "us_im2col": t_legacy,
+            "passes": pw,                         # serial weight planes
+            "act_bytes": act_bytes_fused,
+            "im2col_patch_bytes": patch_bytes,    # moved by legacy path ONLY
+            "patch_hbm_bytes": 0,                 # fused: patches stay in VMEM
+            "weight_bytes": wbytes,
+            "weight_bytes_vs_base": wbytes / wbase}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernel.json")
+    args = ap.parse_args()
+
+    results = {}
+    bench_matmul(results)
+    bench_conv(results)
+    payload = {"bench": "kernelbench", "note": BATCH_ENGINE_NOTE,
+               "configs": results}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out} ({len(results)} configs)")
 
 
 if __name__ == "__main__":

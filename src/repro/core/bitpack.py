@@ -57,25 +57,38 @@ def pack_weights(wq: jax.Array, bits: int) -> jax.Array:
     """Bit-interleave a quantized weight matrix.
 
     wq: int32 [K, N] signed 2's-complement values of ``bits`` precision.
-    Returns uint8 [bits, K//8, N]: plane-major (the paper's interleave),
-    packed 8 K-positions per byte. Total bytes = bits/16 of the 16-bit
-    baseline footprint (K*N*2).
+    Returns uint8 [bits, ceil(K/8), N]: plane-major (the paper's
+    interleave), packed 8 K-positions per byte. K not a multiple of 8 is
+    zero-padded (conv layers: K = k*k*Cin, e.g. 27 for a 3x3 RGB stem);
+    zero reduction rows contribute nothing to the matmul. Total bytes =
+    bits/16 of the 16-bit baseline footprint (K*N*2).
     """
-    planes = q.bit_planes(wq, bits)            # [bits, K, N] in {0,1}
-    return pack_bits_along_axis(planes, axis=1)  # [bits, K//8, N]
+    k = wq.shape[0]
+    if k % 8:
+        wq = jnp.pad(wq, ((0, (-k) % 8), (0, 0)))
+    planes = q.bit_planes(wq, bits)            # [bits, K8, N] in {0,1}
+    return pack_bits_along_axis(planes, axis=1)  # [bits, K8//8, N]
 
 
-def unpack_weights(packed: jax.Array, bits: int) -> jax.Array:
-    """Reconstruct signed int32 [K, N] from the packed plane representation."""
-    planes = unpack_bits_along_axis(packed, axis=1).astype(jnp.int64)  # [bits,K,N]
+def unpack_weights(packed: jax.Array, bits: int, k: int | None = None) -> jax.Array:
+    """Reconstruct signed int32 [K, N] from the packed plane representation.
+
+    ``k`` trims the zero rows added by pack_weights for K % 8 != 0. All
+    arithmetic stays in int32 — plane magnitudes are < 2^16 so products
+    and the plane sum fit; int64 here would silently truncate back to
+    int32 under jax's default x64-disabled config.
+    """
+    planes = unpack_bits_along_axis(packed, axis=1).astype(jnp.int32)  # [bits,K,N]
     w = q.plane_weights(bits).reshape((bits,) + (1,) * (planes.ndim - 1))
-    return jnp.sum(planes * w, axis=0).astype(jnp.int32)
+    out = jnp.sum(planes * w, axis=0, dtype=jnp.int32)
+    return out if k is None else out[:k]
 
 
 def packed_nbytes(shape_kn: tuple[int, int], bits: int) -> int:
-    """Bytes used by the packed representation (the paper's footprint claim)."""
+    """Bytes used by the packed representation (the paper's footprint
+    claim), including the zero rows pack_weights adds for K % 8 != 0."""
     k, n = shape_kn
-    return bits * (k // 8) * n
+    return bits * -(-k // 8) * n
 
 
 def baseline_nbytes(shape_kn: tuple[int, int], base_bits: int = 16) -> int:

@@ -82,23 +82,27 @@ def plane_matmul(xq: jax.Array, wq: jax.Array, cfg: LoomConfig,
         a_planes, a_scales = q.group_planes(xq, cfg.a_bits, cfg.a_plane_bits)
     w_planes, w_scales = q.group_planes(wq, cfg.w_bits, cfg.w_plane_bits)
 
-    # The serial loop: one partial matmul per (activation plane, weight plane)
-    # pair — this is the SIP array's P_a x P_w cycle schedule. On TPU each
-    # pass is an MXU matmul over narrow integers.
-    def body(carry, ij):
-        i, j = ij
-        part = jnp.matmul(a_planes[i].astype(acc_dtype), w_planes[j].astype(acc_dtype),
-                          preferred_element_type=acc_dtype)
-        shift = (a_scales[i] * w_scales[j]).astype(acc_dtype)
-        return carry + part * shift, None
-
+    # All na*nw plane passes of the SIP schedule issued as ONE batched
+    # dot_general over the stacked plane pairs — XLA sees a single fat
+    # integer matmul instead of a scan-serialized chain of small ones
+    # (the scan forced a sequential HLO while-loop, re-reading the full
+    # accumulator every pass). The 2^(ba*i + bw*j) shift weights (with MSB
+    # signs) are folded in afterward as a rank-2 outer product.
     na, nw = a_planes.shape[0], w_planes.shape[0]
-    ii, jj = jnp.meshgrid(jnp.arange(na), jnp.arange(nw), indexing="ij")
-    pairs = (ii.reshape(-1), jj.reshape(-1))
     out_shape = xq.shape[:-1] + (wq.shape[-1],)
-    init = jnp.zeros(out_shape, dtype=acc_dtype)
-    out, _ = jax.lax.scan(body, init, pairs)
-    return out
+    k, n = xq.shape[-1], wq.shape[-1]
+    # Canonical 2-D GEMM [na*M, K] @ [K, nw*N]: XLA:CPU's fast integer
+    # matmul path (a rank-4 dot_general with free na/nw dims falls off
+    # it). The weight transpose is a one-off small copy.
+    a2 = a_planes.reshape(-1, k).astype(acc_dtype)            # [na*M, K]
+    w2 = w_planes.transpose(1, 0, 2).reshape(k, nw * n).astype(acc_dtype)
+    parts = jnp.matmul(a2, w2, preferred_element_type=acc_dtype)
+    if na == 1 and nw == 1:     # LM_8b @ P<=8: one pass, shift == 2^0
+        return parts.reshape(out_shape)
+    parts = parts.reshape(na, -1, nw, n)                      # [na, M, nw, N]
+    shift = (a_scales[:, None] * w_scales[None, :]).astype(acc_dtype)
+    out = jnp.sum(parts * shift[:, None, :, None], axis=(0, 2), dtype=acc_dtype)
+    return out.reshape(out_shape)
 
 
 def loom_matmul(x: jax.Array, w: jax.Array, cfg: LoomConfig,
@@ -130,9 +134,9 @@ def split_k_matmul(xq: jax.Array, wq: jax.Array, cfg: LoomConfig,
     answer to layers with fewer outputs than SIP lanes (split-K matmul)."""
     k = xq.shape[-1]
     assert k % n_slices == 0, (k, n_slices)
-    ks = k // n_slices
-    parts = []
-    for s in range(n_slices):
-        parts.append(plane_matmul(xq[..., s * ks:(s + 1) * ks],
-                                  wq[s * ks:(s + 1) * ks], cfg))
-    return jnp.sum(jnp.stack(parts), axis=0)
+    # Vectorized: plane decomposition is elementwise (commutes with
+    # K-slicing) and the contraction order (slice-major, K/slice within
+    # slice) IS K's natural order, so the per-slice partials plus their
+    # final reduction collapse into exactly plane_matmul's single GEMM —
+    # the cascade is a hardware-topology concept, not extra arithmetic.
+    return plane_matmul(xq, wq, cfg)

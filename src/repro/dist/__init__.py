@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules and mesh utilities."""
+from repro.dist import sharding  # noqa: F401

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused bit-serial convolution (implicit im2col).
+
+This is the CVL execution path of the paper done properly on the TPU
+memory hierarchy. The old lowering (models/cnn.py `_im2col` + matmul)
+materialized [B, Ho, Wo, k*k*C] patch tensors in HBM — a k*k-fold
+activation-bandwidth blowup that inverted the paper's bandwidth law.
+Here the patch tensor never exists outside VMEM:
+
+  * Activations stream as whole NHWC feature maps, one image per grid
+    step: HBM bytes = B * Hp * Wp * C (int8), i.e. the raw map — the
+    paper's Pa/16-law numerator, not k*k times it.
+  * Weights stay bit-packed in HBM: uint8 [Pw, ceil(k*k*C/8), N]
+    (repro.core.bitpack layout, zero-padded K rows when k*k*C % 8 != 0).
+    HBM weight traffic is Pw/16 of the bf16 baseline.
+  * Implicit im2col: the kernel walks the k*k window offsets with static
+    strided slices of the VMEM-resident map — the SIP array's sliding-
+    window wiring — and assembles the [Ho*Wo, k*k*C] patch matrix
+    directly in registers/VMEM.
+  * The serial plane loop is UNROLLED IN THE KERNEL BODY: all Pw packed
+    plane tiles are staged per grid step (one BlockSpec block covers the
+    full plane axis), unpacked once, and each plane issues one int8 MXU
+    pass whose partial product is shift/negate-folded into the int32
+    accumulator (2's-complement MSB negation — the paper's negation
+    block). No outer grid dimension re-walks the image per plane.
+
+VMEM budget per grid step (int8 unless noted): the padded map
+Hp*Wp*C, the packed planes Pw*ceil(kkC/8)*bn, the patch matrix
+Ho*Wo*kkC8, and the int32 accumulator Ho*Wo*bn*4. CIFAR-scale maps
+(<=64x64, C<=256) fit comfortably in 16 MB; larger maps want an
+output-row-tiled variant (ROADMAP open item).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_planes(packed: jax.Array) -> jax.Array:
+    """uint8 [Pw, K8, bn] -> {0,1} int8 [Pw, K8*8, bn] (LE within byte)."""
+    pw, k8, bn = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 1, 8, 1)
+    bits = jnp.right_shift(packed[:, :, None, :], shifts) & jnp.uint8(1)
+    return bits.reshape(pw, k8 * 8, bn).astype(jnp.int8)
+
+
+def _kernel(x_ref, wp_ref, out_ref, *, kernel: int, stride: int, w_bits: int,
+            ho: int, wo: int, kpad: int):
+    """Grid = (B, N/bn). One image, one output-channel tile per step."""
+    xv = x_ref[0]                                   # [Hp, Wp, C] int8
+    c = xv.shape[-1]
+
+    # Implicit im2col: static window-offset strided slices in VMEM. Patch
+    # feature order is (di, dj, c) — identical to models/cnn._im2col and
+    # to the pack_weights row order, so packed linear weights reuse as-is.
+    cols = []
+    for di in range(kernel):
+        for dj in range(kernel):
+            cols.append(jax.lax.slice(
+                xv,
+                (di, dj, 0),
+                (di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
+                (stride, stride, 1)))               # [Ho, Wo, C]
+    patches = jnp.concatenate(cols, axis=-1).reshape(ho * wo, kernel * kernel * c)
+    if kpad:                                        # match packed K rows
+        patches = jnp.pad(patches, ((0, 0), (0, kpad)))
+
+    # One unpack for all Pw planes, then the unrolled serial plane loop:
+    # Pw int8 MXU passes, shift/negate folded into the int32 accumulate.
+    planes = _unpack_planes(wp_ref[...])            # [Pw, K8*8, bn] {0,1}
+    acc = jnp.zeros((patches.shape[0], planes.shape[-1]), jnp.int32)
+    for p in range(w_bits):
+        part = jax.lax.dot_general(
+            patches, planes[p],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)       # int8 x {0,1} MXU pass
+        sign = -1 if p == w_bits - 1 else 1         # MSB negation block
+        acc += part * (sign * (1 << p))
+    out_ref[0] = acc.reshape(ho, wo, planes.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "w_bits",
+                                             "bn", "interpret"))
+def bitserial_conv(x: jax.Array, w_packed: jax.Array, *, kernel: int,
+                   stride: int = 1, w_bits: int,
+                   bn: int = 128, interpret: bool = True) -> jax.Array:
+    """Fused bit-serial "same"-padded conv over packed weight planes.
+
+    x: int8 [B, H, W, C]; w_packed: uint8 [Pw, ceil(k*k*C/8), N].
+    Returns int32 [B, ceil(H/stride), ceil(W/stride), N], integer-exact
+    vs im2col + reference_int_matmul. Odd kernel sizes only ("same"
+    geometry, pad = k//2). interpret=True validates on CPU.
+    """
+    assert kernel % 2 == 1, f"odd kernels only, got {kernel}"
+    b, h, w, c = x.shape
+    pw, k8, n = w_packed.shape
+    kkc = kernel * kernel * c
+    assert pw == w_bits and k8 == -(-kkc // 8), (w_packed.shape, kkc, w_bits)
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+
+    pad = kernel // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    hp, wp_ = h + 2 * pad, w + 2 * pad
+    ho = -(-h // stride)
+    wo = -(-w // stride)
+
+    grid = (b, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, kernel=kernel, stride=stride,
+                          w_bits=w_bits, ho=ho, wo=wo, kpad=k8 * 8 - kkc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp_, c), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((pw, k8, bn), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, bn), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, n), jnp.int32),
+        interpret=interpret,
+    )(xp, w_packed)

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.core import bitpack, engine, quantize as q
 from repro.kernels import ref
+from repro.kernels.bitserial_conv import bitserial_conv
 from repro.kernels.bitserial_matmul import bitserial_matmul, bitserial_matmul_dynamic
 from repro.kernels.dynamic_quant import dynamic_quant
 from repro.kernels.flash_attention import flash_attention
@@ -25,15 +26,98 @@ def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
     """
     lead = x.shape[:-1]
     k = x.shape[-1]
-    x2 = x.reshape(-1, k)
+    # Already-flat inputs skip the reshape round-trip entirely (XLA does
+    # not always elide the pair across the quantize boundary).
+    x2 = x if x.ndim == 2 else x.reshape(-1, k)
+    k8 = w_packed.shape[1] * 8
+    if k8 != k:  # pack_weights zero-pads K%8 rows; mirror on activations
+        x2 = jnp.pad(x2, ((0, 0), (0, k8 - k)))
+    a_bits = min(a_bits, 8)  # int8 kernel ABI; Pa>8 would wrap in astype
     xq, x_scale = q.quantize(x2, a_bits)
     if use_pallas:
         y = bitserial_matmul(xq.astype(jnp.int8), w_packed, w_bits=w_bits,
                              interpret=interpret)
     else:
         y = ref.bitserial_matmul_ref(xq.astype(jnp.int8), w_packed, w_bits)
-    out = y.astype(jnp.float32) * (x_scale * w_scale)
-    return out.reshape(*lead, -1).astype(x.dtype)
+    # Single cast at the end: the int32 accumulate is scaled in f32 and
+    # dropped straight to x.dtype (bf16 in, bf16 out — no double round).
+    out = (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
+    return out if x.ndim == 2 else out.reshape(*lead, -1)
+
+
+def conv_accum_fits_f32(kkc: int, a_bits: int, w_bits: int) -> bool:
+    """True when every partial sum of the integer conv is <= 2^24 in
+    magnitude, i.e. exactly representable in a float32 mantissa."""
+    return kkc << (a_bits - 1 + w_bits - 1) <= 1 << 24
+
+
+def int_conv_same(x_int: jax.Array, w4: jax.Array, stride: int,
+                  exact_f32: bool = False) -> jax.Array:
+    """Integer "same"-padded conv as k*k shift-and-matmul passes.
+
+    x_int: int [B, H, W, C]; w4: int [k, k, C, N] -> exact int32
+    [B, ceil(H/stride), ceil(W/stride), N]. Each window offset (di, dj)
+    contributes one strided slice of the RAW map matmul'd against its
+    [C, N] weight slab — the SIP sliding-window wiring expressed as
+    matmuls. No k*k*C-wide patch tensor exists at any point, and every
+    pass hits XLA's fast matmul path (XLA:CPU lowers integer
+    conv_general_dilated to a slow generic loop — 2-7x slower on the
+    paper CNN's layer shapes).
+
+    ``exact_f32``: run the passes in float32 — callers must guarantee
+    conv_accum_fits_f32, which makes the result bit-identical while
+    hitting the (much faster on CPU) f32 GEMM; small-K stems gain ~4x.
+    """
+    k, _, c, n = w4.shape
+    pad = k // 2
+    b, h, w_, _ = x_int.shape
+    ho, wo = -(-h // stride), -(-w_ // stride)
+    dt = jnp.float32 if exact_f32 else jnp.int32
+    xp = jnp.pad(x_int.astype(dt),
+                 ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    wc = w4.astype(dt)
+    acc = jnp.zeros((b, ho, wo, n), dt)
+    for di in range(k):
+        for dj in range(k):
+            sl = jax.lax.slice(
+                xp, (0, di, dj, 0),
+                (b, di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1))
+            acc = acc + jax.lax.dot_general(
+                sl, wc[di, dj],
+                dimension_numbers=(((3,), (0,)), ((), ())),
+                preferred_element_type=dt)
+    return acc.astype(jnp.int32)
+
+
+def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
+                    *, kernel: int, stride: int, a_bits: int,
+                    use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    """Serving-path fused conv: the CVL execution path.
+
+    x: [B, H, W, C] float; w_packed: uint8 [Pw, ceil(k*k*C/8), N] in the
+    (di, dj, c)-row order of pack_weights(im2col weights). Activations are
+    dynamically quantized to a_bits; the conv runs integer-exact over the
+    packed planes (Pallas fused kernel on TPU/interpret, one XLA integer
+    conv otherwise — neither materializes an im2col patch tensor in HBM).
+    Output in x.dtype.
+    """
+    w_bits = w_packed.shape[0]
+    # int8 is the kernel ABI (one MXU pass per weight plane); higher
+    # profile precisions clamp to 8 like serve_int8 — without this the
+    # astype below would wrap Pa>8 values modulo 256.
+    a_bits = min(a_bits, 8)
+    xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
+    if use_pallas:
+        y = bitserial_conv(xq.astype(jnp.int8), w_packed, kernel=kernel,
+                           stride=stride, w_bits=w_bits, interpret=interpret)
+    else:
+        c = x.shape[-1]
+        kkc = kernel * kernel * c
+        wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)
+        y = int_conv_same(xq, wq.reshape(kernel, kernel, c, -1), stride,
+                          exact_f32=conv_accum_fits_f32(kkc, a_bits, w_bits))
+    return (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
 
 
 def quantize_activations(x: jax.Array, *, group_size: int = 256, bits: int = 8,

@@ -33,6 +33,29 @@ def bitserial_matmul_dynamic_ref(x: jax.Array, w_packed: jax.Array,
     return jnp.matmul(x.astype(jnp.int32), w_eff, preferred_element_type=jnp.int32)
 
 
+def bitserial_conv_ref(x: jax.Array, w_packed: jax.Array, *, kernel: int,
+                       stride: int = 1, w_bits: int) -> jax.Array:
+    """Oracle + XLA serving path for the fused bit-serial conv.
+
+    x: int [B, H, W, C]; w_packed: uint8 [Pw, ceil(k*k*C/8), N].
+    Exact int32 "same"-padded conv (pad = k//2, Ho = ceil(H/stride)) of x
+    against the unpacked weights — a single lax.conv_general_dilated, so
+    XLA fuses the window walk and NO im2col patch tensor is materialized
+    on this path either.
+    """
+    c = x.shape[-1]
+    kkc = kernel * kernel * c
+    wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)   # int32 [kkC, N]
+    w4 = wq.reshape(kernel, kernel, c, -1)
+    pad = kernel // 2
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w4,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+
+
 def dynamic_quant_ref(x: jax.Array, group_size: int, bits: int = 8):
     """Per-group symmetric quantization + effective-precision detection.
 

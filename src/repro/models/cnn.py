@@ -1,10 +1,16 @@
 """The paper's own model family: a CNN with CVLs + FCLs via Loom.
 
-Convolutions are lowered to im2col + LoomLinear matmuls — exactly how the
-SIP array consumes them (weight reuse across windows = the matmul's M
-dimension). Used by the Table-1 benchmark to run the Judd-style precision
-profiler and the dynamic-precision measurements live on CPU, and by the
-quickstart example. Scaled to CIFAR-size so it runs on this container.
+Convolutions run through the FUSED bit-serial conv path
+(layers.conv_apply): the window walk happens inside the conv kernel
+(Pallas implicit im2col in VMEM, or one XLA integer conv), so no
+[B, Ho, Wo, k*k*C] patch tensor ever reaches HBM and activation traffic
+obeys the paper's bandwidth law. Weights keep the 2-D [k*k*Cin, Cout]
+matrix layout so profiling/packing are shared with the FC layers.
+``ExecConfig(conv_mode="im2col")`` selects the legacy materializing
+lowering for A/B benchmarks. Used by the Table-1 benchmark to run the
+Judd-style precision profiler and the dynamic-precision measurements
+live on CPU, and by the quickstart example. Scaled to CIFAR-size so it
+runs on this container.
 """
 from __future__ import annotations
 
@@ -83,8 +89,12 @@ def forward(params, cfg: CNNConfig, x: jax.Array, exec_cfg: L.ExecConfig,
     for c in cfg.convs:
         if collect_activations:
             acts[c.name] = x
-        patches = _im2col(x, c.kernel, c.stride)
-        y = L.linear_apply(params[c.name], patches, exec_cfg, c.name)
+        if exec_cfg.conv_mode == "fused":
+            y = L.conv_apply(params[c.name], x, c.kernel, c.stride,
+                             exec_cfg, c.name)
+        else:  # legacy HBM-materializing lowering (A/B baseline)
+            patches = _im2col(x, c.kernel, c.stride)
+            y = L.linear_apply(params[c.name], patches, exec_cfg, c.name)
         y = jax.nn.relu(y)
         if c.pool > 1:
             b, h, w, ch = y.shape

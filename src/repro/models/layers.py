@@ -42,6 +42,9 @@ class ExecConfig:
     policy: PrecisionPolicy = PrecisionPolicy()
     use_pallas: bool = False         # Mosaic kernels (TPU) vs XLA oracle path
     interpret: bool = True           # Pallas interpret mode (CPU validation)
+    conv_mode: str = "fused"         # fused (implicit-im2col conv path) |
+    #                                  im2col (legacy HBM patch materialization,
+    #                                  kept for A/B benchmarking only)
 
 
 def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -112,6 +115,57 @@ def linear_apply(p: dict, x: jax.Array, exec_cfg: ExecConfig,
         return ops.loom_linear_serve(
             x, p["w_packed"], p["w_scale"], a_bits=prec.a_bits,
             w_bits=p["w_packed"].shape[0], use_pallas=exec_cfg.use_pallas,
+            interpret=exec_cfg.interpret)
+    raise ValueError(mode)
+
+
+def _conv_same(x: jax.Array, w4: jax.Array, stride: int,
+               preferred=None) -> jax.Array:
+    """"same"-padded NHWC/HWIO conv, Ho = ceil(H/stride) (odd kernels)."""
+    pad = w4.shape[0] // 2
+    return jax.lax.conv_general_dilated(
+        x, w4, window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=preferred)
+
+
+def conv_apply(p: dict, x: jax.Array, kernel: int, stride: int,
+               exec_cfg: ExecConfig, layer_name: str = "") -> jax.Array:
+    """Dispatch a convolution through the configured Loom execution mode.
+
+    Weights live in the param tree in the SAME 2-D [k*k*Cin, Cout] matrix
+    layout as linears (row order (di, dj, c)), so precision profiling,
+    serving conversion, and bit-packing are shared with LoomLinear. All
+    four modes run FUSED convs — the window walk happens inside
+    lax.conv_general_dilated or the Pallas kernel, never as an HBM patch
+    tensor.
+    """
+    mode = exec_cfg.mode
+    c_in = x.shape[-1]
+
+    def as_hwio(w2):
+        return w2.reshape(kernel, kernel, c_in, -1)
+
+    if mode == "dense":
+        return _conv_same(x, as_hwio(p["w"]).astype(x.dtype), stride)
+    prec = exec_cfg.policy.lookup(layer_name)
+    if mode == "fake_quant":
+        xq = q.fake_quant(x, prec.a_bits)
+        wq = q.fake_quant(p["w"].astype(jnp.float32), prec.w_bits).astype(x.dtype)
+        return _conv_same(xq, as_hwio(wq), stride)
+    if mode == "serve_int8":
+        a_bits = min(prec.a_bits, 8)
+        xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
+        y = ops.int_conv_same(
+            xq, as_hwio(p["wq"]), stride,
+            exact_f32=ops.conv_accum_fits_f32(kernel * kernel * c_in,
+                                              a_bits, 8))
+        return (y * (x_scale * p["w_scale"]).astype(jnp.float32)).astype(x.dtype)
+    if mode == "serve_packed":
+        return ops.loom_conv_serve(
+            x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
+            a_bits=prec.a_bits, use_pallas=exec_cfg.use_pallas,
             interpret=exec_cfg.interpret)
     raise ValueError(mode)
 

@@ -1,0 +1,61 @@
+"""Strategy objects for the hypothesis stub: draw via ``.example(rng)``.
+
+Only the strategies the repo's tests use are provided. Each is a tiny
+sampler over its space; composition mirrors real hypothesis semantics.
+"""
+from __future__ import annotations
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _max_tries: int = 100):
+        def draw(rng):
+            for _ in range(_max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise AssertionError("hypothesis-stub: filter found no example")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def sampled_from(seq) -> SearchStrategy:
+    seq = list(seq)
+    return SearchStrategy(lambda rng: rng.choice(seq))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strats) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strats) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.choice(strats).example(rng))

@@ -83,6 +83,77 @@ def test_bitserial_matmul_dynamic_skips_planes():
         np.asarray(y), np.asarray(jnp.matmul(x.astype(jnp.int32), wq)))
 
 
+@pytest.mark.parametrize("counts,pw", [
+    ((0, 8, 3, 5), 8),        # a zero-plane tile and a full-width tile
+    ((11, 0, 11, 1), 11),     # full-width entries at Pw=11, zeros between
+    ((2, 4, 6, 8), 8),
+])
+def test_bitserial_matmul_dynamic_vs_ref(counts, pw):
+    """Direct kernel-vs-oracle coverage for the dynamic-precision kernel
+    (only the static kernel was exercised before). plane_counts == 0 must
+    produce an all-zero N-tile; full-width counts must reproduce the
+    static kernel's result for that tile."""
+    rng = np.random.default_rng(sum(counts) + pw)
+    m, k, bn = 8, 64, 8
+    n = bn * len(counts)
+    x = jnp.asarray(rng.integers(-128, 128, size=(m, k)), dtype=jnp.int8)
+    cols = []
+    for c in counts:
+        if c == 0:
+            cols.append(np.zeros((k, bn), dtype=np.int64))
+        else:
+            cols.append(rng.integers(-(1 << (c - 1)), 1 << (c - 1),
+                                     size=(k, bn)))
+    wq = jnp.asarray(np.concatenate(cols, axis=1), dtype=jnp.int32)
+    wp = bitpack.pack_weights(wq, pw)
+    counts_arr = jnp.asarray(counts, dtype=jnp.int32)
+    y = bitserial_matmul_dynamic(x, wp, counts_arr, w_bits=pw, bm=m, bn=bn,
+                                 bk=32)
+    expect = ref.bitserial_matmul_dynamic_ref(x, wp, counts_arr, pw, bn)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(expect))
+    # zero-count tiles are exactly zero; the whole thing matches the
+    # plain integer matmul (values fit their per-tile widths).
+    for j, c in enumerate(counts):
+        if c == 0:
+            assert not np.asarray(y[:, j * bn:(j + 1) * bn]).any()
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(jnp.matmul(x.astype(jnp.int32), wq)))
+
+
+def test_bitserial_matmul_dynamic_ref_zero_and_full():
+    """The oracle itself: counts=0 tiles contribute nothing even when the
+    packed planes hold garbage above the effective width."""
+    rng = np.random.default_rng(0)
+    m, k, bn, pw = 4, 32, 8, 8
+    x = jnp.asarray(rng.integers(-128, 128, size=(m, k)), dtype=jnp.int8)
+    wq = jnp.asarray(rng.integers(-128, 128, size=(k, 2 * bn)), jnp.int32)
+    wp = bitpack.pack_weights(wq, pw)
+    counts = jnp.asarray([0, pw], dtype=jnp.int32)
+    y = ref.bitserial_matmul_dynamic_ref(x, wp, counts, pw, bn)
+    assert not np.asarray(y[:, :bn]).any()
+    np.testing.assert_array_equal(
+        np.asarray(y[:, bn:]),
+        np.asarray(jnp.matmul(x.astype(jnp.int32), wq[:, bn:])))
+
+
+def test_pack_roundtrip_pw16():
+    """Pw=16 round-trip: the MSB plane weight is -2^15; the unpack must
+    stay in int32 (an int64 intermediate silently truncates under jax's
+    default x64-disabled config)."""
+    rng = np.random.default_rng(16)
+    wq = jnp.asarray(rng.integers(q.qmin(16), q.qmax(16) + 1, size=(64, 32)),
+                     jnp.int32)
+    packed = bitpack.pack_weights(wq, 16)
+    back = bitpack.unpack_weights(packed, 16)
+    assert back.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(wq))
+    # extremes: qmin has only the MSB plane set, qmax all lower planes
+    ex = jnp.asarray([[q.qmin(16)], [q.qmax(16)], [0], [-1]], jnp.int32)
+    ex = jnp.tile(ex, (2, 8))  # K=8 rows, N=8
+    back2 = bitpack.unpack_weights(bitpack.pack_weights(ex, 16), 16)
+    np.testing.assert_array_equal(np.asarray(back2), np.asarray(ex))
+
+
 # ---------------------------------------------------------------------------
 # dynamic_quant
 # ---------------------------------------------------------------------------
