@@ -1,12 +1,33 @@
-# Tier-1 verification and benchmarks. conftest.py already prepends src/ to
-# sys.path, so pytest needs no PYTHONPATH; the benchmarks are plain scripts
-# and still want it.
+# Tier-1 verification, benchmarks, and lint. conftest.py already prepends
+# src/ to sys.path, so pytest needs no PYTHONPATH; the benchmarks are plain
+# scripts and still want it.
 PY ?= python
 
-.PHONY: test bench
+# Lint scope: the execution-plan API plus the files it rewired (kept
+# narrow on purpose — the seed tree predates the lint config).
+LINT_PATHS = src/repro/api \
+             src/repro/kernels/ops.py \
+             src/repro/models/layers.py \
+             src/repro/models/cnn.py \
+             src/repro/core/dynamic.py \
+             src/repro/launch/serve.py \
+             benchmarks/kernelbench.py \
+             tests/test_api.py
+
+.PHONY: test bench bench-smoke lint
 
 test:
 	$(PY) -m pytest -x -q
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/kernelbench.py
+
+bench-smoke:
+	PYTHONPATH=src $(PY) benchmarks/kernelbench.py --smoke
+
+lint:
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+		$(PY) -m ruff check $(LINT_PATHS); \
+	else \
+		echo "[lint] ruff not installed — skipping (CI installs it)"; \
+	fi

@@ -16,11 +16,16 @@ And for the FUSED CONV path (the CVL law end-to-end):
   * packed conv weight bytes == Pw/16 x bf16, K rows = ceil(k*k*C/8)*8
   * wall-time of fused vs legacy im2col serve_packed conv on CPU.
 
+And for DYNAMIC activation trimming (Loom's runtime lever, per group-size
+in {64, 256}): static vs dynamic serve_packed parity, the mean effective
+activation planes the OR-tree path executes, and the modeled/measured
+speedup — recorded so the dynamic trajectory is tracked across PRs.
+
 Every jitted callable is bound with functools.partial (a lambda closing
 over the loop variable would retrace — and silently time — the LAST
 config only). Results are written machine-readable to BENCH_kernel.json
-{config -> {us, passes, bytes...}} so the perf trajectory is tracked
-across PRs.
+{config -> {us, passes, bytes...}}, validated against bench_schema.json
+(--smoke runs a fast subset + the schema check; CI's smoke job).
 """
 import argparse
 import functools
@@ -36,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitpack, engine, quantize as q
+from repro.core import bitpack, dynamic, engine, quantize as q
 from repro.kernels import ops
 
 BATCH_ENGINE_NOTE = (
@@ -44,7 +49,11 @@ BATCH_ENGINE_NOTE = (
     "stacked plane pairs (lax.scan removed this PR)")
 
 
-def _time(f, *args, n=5):
+N_REPS = 5
+
+
+def _time(f, *args, n=None):
+    n = N_REPS if n is None else n
     f(*args).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(n):
@@ -164,19 +173,99 @@ def bench_conv(results):
             "weight_bytes_vs_base": wbytes / wbase}
 
 
+def bench_dynamic(results):
+    """Static vs dynamic serve_packed: runtime activation-plane trimming.
+
+    Skewed activations (most row groups quiet, a few loud — the regime
+    the Lascorz OR-tree exploits): per group-size, record the mean
+    effective planes executed, the cycle-model speedup Pa/E[eff] (what
+    real SIP hardware gains), and the measured CPU-oracle wall-times
+    (informational — the XLA oracle materializes the truncated planes, so
+    CPU wall-clock does NOT reflect the modeled gain)."""
+    print("== static vs dynamic serve_packed: runtime activation trimming ==")
+    rng = np.random.default_rng(2)
+    m, k, n, pa, pw = 512, 512, 256, 8, 8
+    xr = rng.normal(size=(m, k)).astype(np.float32)
+    # Block-structured skew: the loud rows are contiguous (one hot request
+    # in a batch / non-padded prefix), so whole row GROUPS stay quiet —
+    # the granularity at which the OR-tree can actually trim planes.
+    xr[m // 4:] *= 0.02
+    x = jnp.asarray(xr)
+    wf = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    w_packed, ws = _serve_packed_params(wf, pw)
+
+    static = jax.jit(functools.partial(
+        ops.loom_linear_serve, w_packed=w_packed, w_scale=ws,
+        a_bits=pa, w_bits=pw, backend="xla"))
+    t_static = _time(static, x)
+    xq, _ = q.quantize(x, pa)
+
+    for g in (64, 256):
+        dyn = jax.jit(functools.partial(
+            ops.loom_linear_serve_dynamic, w_packed=w_packed, w_scale=ws,
+            a_bits=pa, w_bits=pw, group_size=g, backend="xla"))
+        np.testing.assert_array_equal(np.asarray(static(x)),
+                                      np.asarray(dyn(x)))  # bit-exact
+        t_dyn = _time(dyn, x)
+        counts = dynamic.serve_group_counts(xq, g, pa)
+        mean_eff = float(jnp.mean(counts.astype(jnp.float32)))
+        frac = mean_eff / pa
+        modeled = pa / mean_eff              # serial-plane cycle model
+        print(f"  group={g:3d}: mean effective planes {mean_eff:.2f}/{pa} "
+              f"(fraction {frac:.3f})  modeled speedup {modeled:.2f}x   "
+              f"static {t_static:8.1f} us  dynamic-oracle {t_dyn:8.1f} us")
+        results[f"dynamic_serve_g{g}"] = {
+            "us": t_dyn, "us_static": t_static,
+            "passes": pw,
+            "group_size": g, "static_a_planes": pa,
+            "mean_effective_planes": mean_eff,
+            "plane_fraction_executed": frac,
+            "modeled_speedup": modeled,
+            "measured_speedup": t_static / t_dyn}
+
+
+def validate_payload(payload, schema_path, required=False):
+    """Validate the benchmark JSON against the checked-in schema.
+
+    ``required=False`` tolerates a missing jsonschema package (bench
+    results still matter on boxes without it); --smoke (the CI job) makes
+    validation mandatory."""
+    try:
+        import jsonschema
+    except ImportError:
+        if required:
+            raise
+        print("[bench] jsonschema not installed — skipping schema check")
+        return
+    with open(schema_path) as f:
+        schema = json.load(f)
+    jsonschema.validate(payload, schema)
+    print(f"schema OK ({schema_path})")
+
+
 def main():
+    global N_REPS
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_kernel.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-rep timing + schema validation (CI job)")
     args = ap.parse_args()
+    if args.smoke:
+        N_REPS = 1
 
     results = {}
     bench_matmul(results)
     bench_conv(results)
+    bench_dynamic(results)
     payload = {"bench": "kernelbench", "note": BATCH_ENGINE_NOTE,
                "configs": results}
+    # Write FIRST — a schema failure must not discard minutes of timings.
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out} ({len(results)} configs)")
+    schema_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "bench_schema.json")
+    validate_payload(payload, schema_path, required=args.smoke)
 
 
 if __name__ == "__main__":

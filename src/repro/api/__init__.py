@@ -1,0 +1,36 @@
+"""Loom execution-plan API: compiled per-layer plans, backends, sessions.
+
+    import repro.api as loom
+    session = loom.compile(cfg, policy, mode="serve_packed", backend="xla")
+    logits, cache = session.prefill(tokens)
+
+``plan`` and ``backend`` are dependency-light (core + kernels only) and
+imported eagerly — model layers dispatch through them. ``session`` pulls
+in the model zoo, so it loads lazily on first attribute access to keep
+the layers -> plan import edge acyclic.
+"""
+from repro.api import backend as backend  # noqa: PLC0414 (re-export)
+from repro.api import plan as plan        # noqa: PLC0414 (re-export)
+from repro.api.backend import (Backend, PallasBackend, get_backend,
+                               list_backends, register_backend,
+                               resolve_backend)
+from repro.api.plan import (ExecutionPlan, LayerPlan, as_plan, build_plan)
+
+__all__ = [
+    "Backend", "PallasBackend", "get_backend", "list_backends",
+    "register_backend", "resolve_backend", "ExecutionPlan", "LayerPlan",
+    "as_plan", "build_plan", "compile", "ServingSession", "plan", "backend",
+    "session",
+]
+
+_SESSION_EXPORTS = ("compile", "ServingSession", "session")
+
+
+def __getattr__(name: str):
+    if name in _SESSION_EXPORTS:
+        import importlib
+        session = importlib.import_module("repro.api.session")
+        if name == "session":
+            return session
+        return getattr(session, name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

@@ -1,0 +1,180 @@
+"""Backend registry: one object per kernel substrate, one uniform op surface.
+
+A :class:`Backend` owns the *lowering* decision that used to be threaded
+through every signature in ``kernels/ops.py`` and ``models/layers.py`` as
+``use_pallas``/``interpret`` boolean pairs. Model code never chooses a
+kernel again — it asks its :class:`~repro.api.plan.LayerPlan` for the
+backend and calls one of five ops:
+
+    matmul_planes          static bit-serial matmul over packed planes
+    matmul_planes_dynamic  plane-count-gated variant (runtime trimming)
+    conv_planes            fused bit-serial convolution
+    dynamic_quant          per-group activation quantization + OR-tree bits
+    attention              full-sequence attention
+
+Built-ins:
+
+    xla              pure-XLA oracle paths (CPU dry-run / fallback)
+    pallas_interpret Pallas kernels under interpret=True (CPU validation)
+    pallas_tpu       Pallas kernels compiled by Mosaic (real TPU)
+
+``register_backend`` admits out-of-tree substrates (a future Triton or
+CUDA port) without touching model code: implement the five ops, register
+under a name, pass ``backend="yourname"`` to ``loom.compile``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitserial_conv import bitserial_conv
+from repro.kernels.bitserial_matmul import (bitserial_matmul,
+                                            bitserial_matmul_dynamic)
+from repro.kernels.dynamic_quant import dynamic_quant
+from repro.kernels.flash_attention import flash_attention
+
+
+def _pallas_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """MXU-default block shape, shrunk to divisors for small/odd operands.
+
+    The kernels assert dim % block == 0; the 128/128/512 defaults only fit
+    MXU-aligned shapes, so fall back to the full dim when it doesn't divide
+    (interpret-mode correctness never depends on the block shape)."""
+    bm = 128 if m % 128 == 0 else m
+    bn = 128 if n % 128 == 0 else n
+    bk = 512 if k % 512 == 0 else k
+    return bm, bn, bk
+
+
+class Backend:
+    """XLA oracle backend — also the base class of the Pallas backends."""
+
+    name = "xla"
+    use_pallas = False      # legacy introspection (ExecConfig shim)
+    interpret = True
+
+    def matmul_planes(self, xq: jax.Array, w_packed: jax.Array, *,
+                      w_bits: int) -> jax.Array:
+        """int8 [M, K] @ packed uint8 [Pw, K//8, N] -> exact int32 [M, N]."""
+        return ref.bitserial_matmul_ref(xq, w_packed, w_bits)
+
+    def matmul_planes_dynamic(self, xq: jax.Array, w_packed: jax.Array,
+                              plane_counts: jax.Array, *, w_bits: int,
+                              bn: int) -> jax.Array:
+        """Like matmul_planes but N-tile j executes only plane_counts[j]
+        planes of the packed operand (2's complement at the effective
+        width). ``bn`` is the N-tile width one count covers."""
+        return ref.bitserial_matmul_dynamic_ref(xq, w_packed, plane_counts,
+                                                w_bits, bn)
+
+    def conv_planes(self, xq: jax.Array, w_packed: jax.Array, *, kernel: int,
+                    stride: int, w_bits: int, a_bits: int) -> jax.Array:
+        """Fused bit-serial "same" conv: int [B,H,W,C] x packed planes ->
+        exact int32 [B, Ho, Wo, N]. No im2col patch tensor in HBM."""
+        from repro.core import bitpack
+        from repro.kernels import ops
+        c = xq.shape[-1]
+        kkc = kernel * kernel * c
+        wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)
+        return ops.int_conv_same(
+            xq, wq.reshape(kernel, kernel, c, -1), stride,
+            exact_f32=ops.conv_accum_fits_f32(kkc, a_bits, w_bits))
+
+    def dynamic_quant(self, x2: jax.Array, *, group_size: int,
+                      bits: int) -> tuple:
+        """f32 [M, K] -> (xq int8, per-group scale, per-group eff bits)."""
+        return ref.dynamic_quant_ref(x2, group_size, bits)
+
+    def attention(self, q_: jax.Array, k_: jax.Array, v_: jax.Array, *,
+                  causal: bool = True, window: int | None = None) -> jax.Array:
+        return ref.flash_attention_ref(q_, k_, v_, causal=causal,
+                                       window=window)
+
+    def __repr__(self):
+        return f"<Backend {self.name}>"
+
+
+class PallasBackend(Backend):
+    """Mosaic kernels; ``interpret=True`` runs them on CPU for validation."""
+
+    use_pallas = True
+
+    def __init__(self, name: str, interpret: bool):
+        self.name = name
+        self.interpret = interpret
+
+    def matmul_planes(self, xq, w_packed, *, w_bits):
+        m, k = xq.shape
+        n = w_packed.shape[-1]
+        bm, bn, bk = _pallas_blocks(m, n, k)
+        return bitserial_matmul(xq, w_packed, w_bits=w_bits, bm=bm, bn=bn,
+                                bk=bk, interpret=self.interpret)
+
+    def matmul_planes_dynamic(self, xq, w_packed, plane_counts, *, w_bits,
+                              bn):
+        m, k = xq.shape
+        n = w_packed.shape[-1]
+        bm, _, bk = _pallas_blocks(m, n, k)
+        return bitserial_matmul_dynamic(xq, w_packed, plane_counts,
+                                        w_bits=w_bits, bm=bm, bn=bn, bk=bk,
+                                        interpret=self.interpret)
+
+    def conv_planes(self, xq, w_packed, *, kernel, stride, w_bits, a_bits):
+        return bitserial_conv(xq.astype(jnp.int8), w_packed, kernel=kernel,
+                              stride=stride, w_bits=w_bits,
+                              interpret=self.interpret)
+
+    def dynamic_quant(self, x2, *, group_size, bits):
+        return dynamic_quant(x2, group_size=group_size, bits=bits,
+                             interpret=self.interpret)
+
+    def attention(self, q_, k_, v_, *, causal=True, window=None):
+        return flash_attention(q_, k_, v_, causal=causal, window=window,
+                               interpret=self.interpret)
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(name: str, backend: Backend) -> Backend:
+    """Register (or replace) a backend under ``name``."""
+    _REGISTRY[name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(backend=None, use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> Backend:
+    """Normalize any legacy spelling to a Backend object.
+
+    ``backend`` may be a Backend, a registered name, or None — in which
+    case the deprecated ``use_pallas``/``interpret`` booleans (the old
+    ExecConfig fields) pick among the built-ins.
+    """
+    if isinstance(backend, Backend):
+        return backend
+    if isinstance(backend, str):
+        return get_backend(backend)
+    if backend is not None:
+        raise TypeError(f"backend must be a Backend or name, got {backend!r}")
+    if use_pallas:
+        return get_backend("pallas_interpret" if (interpret is None or interpret)
+                           else "pallas_tpu")
+    return get_backend("xla")
+
+
+register_backend("xla", Backend())
+register_backend("pallas_interpret", PallasBackend("pallas_interpret", True))
+register_backend("pallas_tpu", PallasBackend("pallas_tpu", False))

@@ -1,0 +1,185 @@
+"""Execution plans: per-layer dispatch decisions resolved once, not per call.
+
+The seed repo dispatched every linear/conv through string-mode ``if/elif``
+chains (``mode == "serve_packed"`` ...) plus a ``policy.lookup(layer_name)``
+string match *inside every apply call*. A :class:`LayerPlan` hoists all of
+that to conversion/compile time: the layer's kind, its resolved
+(Pa, Pw), the packed-weight route, the conv geometry, and the dynamic-trim
+group config are frozen into one record, and apply-time code branches on
+``plan.route`` — a closed enum resolved exactly once per layer.
+
+``build_plan(cfg, policy, mode, backend)`` produces the model-wide
+:class:`ExecutionPlan`: a pytree-of-records keyed by layer name (LM layer
+classes such as ``attn_q``/``ffn_up``, or CNN layer names such as
+``conv1``/``fc0``), with lazy resolution for names that only appear at
+apply time. The plan also owns the :class:`~repro.api.backend.Backend`,
+subsuming the ``use_pallas``/``interpret`` flag pairs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api.backend import Backend, resolve_backend
+from repro.core.policy import LayerPrecision, PrecisionPolicy
+
+# Routes: the closed set of execution strategies a layer can resolve to.
+DENSE = "dense"              # bf16 matmul (DPNN-equivalent baseline)
+FAKE_QUANT = "fake_quant"    # QAT STE fake-quant forward
+INT8 = "int8"                # LM_8b: dynamic act quant + int8 weights
+PACKED = "packed"            # paper-faithful bit-serial packed planes
+
+# Execution-mode names (the public/serving vocabulary) -> routes.
+MODE_ROUTES = {
+    "dense": DENSE,
+    "fake_quant": FAKE_QUANT,
+    "serve_int8": INT8,
+    "serve_packed": PACKED,
+}
+
+# Param-tree key -> apply-time layer-class name used by PrecisionPolicy.
+# (Shared with models.model's serving conversion walk.)
+PARAM_CLASS_NAMES = {"wq": "attn_q", "wk": "attn_k", "wv": "attn_v",
+                     "wo": "attn_o", "w_gate": "ffn_gate", "w_up": "ffn_up",
+                     "w_down": "ffn_down", "head": "lm_head",
+                     "in_x": "ssm_x", "in_z": "ssm_z", "in_B": "ssm_B",
+                     "in_C": "ssm_C", "in_dt": "ssm_dt", "out": "ssm_out"}
+
+# Every linear layer class an LM architecture can route through.
+LM_LINEAR_CLASSES = tuple(sorted(set(PARAM_CLASS_NAMES.values()))) + (
+    "moe_expert", "moe_shared_gate", "moe_shared_up", "moe_shared_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Everything apply-time dispatch needs for ONE layer, resolved once.
+
+    ``route`` is one of the module-level route constants. ``dynamic_a``
+    enables runtime per-group activation-plane trimming on the PACKED
+    route (groups of ``group_size`` concurrently-processed rows; the
+    Lascorz OR-tree path). ``kernel``/``stride`` are conv geometry;
+    ``conv_route`` picks the fused implicit-im2col lowering vs the legacy
+    HBM-materializing one (A/B benchmarks only).
+    """
+
+    name: str
+    kind: str                      # "linear" | "conv"
+    route: str                     # DENSE | FAKE_QUANT | INT8 | PACKED
+    precision: LayerPrecision = LayerPrecision()
+    dynamic_a: bool = False
+    group_size: int = 256
+    kernel: int | None = None
+    stride: int | None = None
+    conv_route: str = "fused"      # "fused" | "im2col"
+
+    @property
+    def a_bits(self) -> int:
+        return self.precision.a_bits
+
+    @property
+    def w_bits(self) -> int:
+        return self.precision.w_bits
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Model-wide execution plan: resolved LayerPlans + the backend.
+
+    ``layers`` maps ``(name, kind)`` to a resolved :class:`LayerPlan`;
+    names not pre-resolved by :func:`build_plan` (e.g. ad-hoc layer names
+    in examples) resolve lazily on first use and are memoized, so policy
+    string matching happens at most once per layer, never per call.
+
+    ``mode`` and ``policy`` are kept as attributes for compatibility with
+    code that introspected the old ``ExecConfig`` (e.g. the MoE expert
+    path); new code should only touch ``layer()`` and ``backend``.
+    """
+
+    mode: str
+    policy: PrecisionPolicy
+    backend: Backend
+    conv_route: str = "fused"
+    layers: dict = dataclasses.field(default_factory=dict)
+
+    def layer(self, name: str = "", kind: str = "linear",
+              kernel: int | None = None, stride: int | None = None
+              ) -> LayerPlan:
+        key = (name, kind)
+        lp = self.layers.get(key)
+        if lp is None:
+            lp = self._resolve(name, kind, kernel, stride)
+            self.layers[key] = lp
+        elif kernel is not None:
+            if lp.kernel is None:
+                # Resolved before the geometry was known (e.g. via
+                # introspection on a lazy plan): fill it in, once.
+                lp = dataclasses.replace(lp, kernel=kernel, stride=stride)
+                self.layers[key] = lp
+            elif (lp.kernel, lp.stride) != (kernel, stride):
+                raise ValueError(
+                    f"layer {name!r} resolved with conv geometry "
+                    f"{(lp.kernel, lp.stride)} but called with "
+                    f"{(kernel, stride)}")
+        return lp
+
+    def _resolve(self, name, kind, kernel=None, stride=None) -> LayerPlan:
+        try:
+            route = MODE_ROUTES[self.mode]
+        except KeyError:
+            raise ValueError(f"unknown execution mode {self.mode!r}; "
+                             f"expected one of {sorted(MODE_ROUTES)}") from None
+        return LayerPlan(
+            name=name, kind=kind, route=route,
+            precision=self.policy.lookup(name),
+            dynamic_a=self.policy.dynamic_a,
+            group_size=self.policy.group_size,
+            kernel=kernel, stride=stride, conv_route=self.conv_route)
+
+    @property
+    def use_pallas(self) -> bool:  # legacy ExecConfig introspection
+        return self.backend.use_pallas
+
+    @property
+    def interpret(self) -> bool:   # legacy ExecConfig introspection
+        return self.backend.interpret
+
+    @property
+    def conv_mode(self) -> str:    # legacy ExecConfig introspection
+        return self.conv_route
+
+
+def build_plan(cfg, policy: PrecisionPolicy | None = None,
+               mode: str = "dense", backend="xla",
+               conv_route: str = "fused") -> ExecutionPlan:
+    """Compile the per-layer plans for a model config.
+
+    ``cfg`` may be a ``models.transformer.ModelConfig`` (pre-resolves the
+    LM linear classes), a ``models.cnn.CNNConfig`` (pre-resolves each conv
+    with its kernel/stride plus the FC head), or None (everything lazy).
+    ``backend`` is a Backend object or registered name.
+    """
+    policy = policy if policy is not None else PrecisionPolicy()
+    plan = ExecutionPlan(mode=mode, policy=policy,
+                         backend=resolve_backend(backend),
+                         conv_route=conv_route)
+    if cfg is None:
+        return plan
+    if hasattr(cfg, "convs"):            # CNNConfig
+        for c in cfg.convs:
+            plan.layer(c.name, kind="conv", kernel=c.kernel, stride=c.stride)
+            plan.layer(c.name, kind="linear")   # legacy im2col A/B route
+        for i in range(len(cfg.fcs)):
+            plan.layer(f"fc{i}", kind="linear")
+    elif hasattr(cfg, "pattern"):        # ModelConfig
+        for cls in LM_LINEAR_CLASSES:
+            plan.layer(cls, kind="linear")
+    return plan
+
+
+def as_plan(obj) -> ExecutionPlan:
+    """Coerce an ExecutionPlan or a deprecated ``ExecConfig`` to a plan."""
+    if isinstance(obj, ExecutionPlan):
+        return obj
+    to_plan = getattr(obj, "as_plan", None)
+    if to_plan is None:
+        raise TypeError(f"expected ExecutionPlan or ExecConfig, got {obj!r}")
+    return to_plan()

@@ -22,15 +22,46 @@ from repro.core import quantize as q
 def group_effective_bits(xq: jax.Array, group_size: int) -> jax.Array:
     """Effective signed precision per group along the last axis.
 
-    xq: int32 [..., K] quantized activations. Returns int32 [..., K/group]
-    with the per-group minimum sufficient precision (sign included) — the
-    OR-tree + leading-one-detector of the paper.
+    xq: int32 [..., K] quantized activations. Returns int32
+    [..., ceil(K/group)] with the per-group minimum sufficient precision
+    (sign included) — the OR-tree + leading-one-detector of the paper.
+
+    K need not divide the group size: the ragged trailing group is
+    zero-padded, and zeros never raise the group OR, so the tail group
+    reports the effective precision of its real elements (an all-padding
+    group would report the 1-bit floor). This is what lets CNN head
+    layers and odd-K linears enable ``dynamic_a``.
     """
     *lead, k = xq.shape
-    assert k % group_size == 0, (k, group_size)
+    pad = (-k) % group_size
+    if pad:
+        xq = jnp.pad(xq, [(0, 0)] * len(lead) + [(0, pad)])
+        k += pad
     g = xq.reshape(*lead, k // group_size, group_size)
     # OR of |values| across the group ~ leading-one position of the max.
     return q.effective_bits(g, axis=-1)
+
+
+def serve_group_counts(xq: jax.Array, group_size: int,
+                       max_bits: int) -> jax.Array:
+    """Runtime activation plane counts for the bit-serial serving path.
+
+    xq: int [M, K] quantized activations (per-tensor scale — the SAME
+    grid as the static path, so trimming is value-preserving). Groups are
+    ``group_size`` concurrently-processed rows (windows/tokens) — the
+    serving analogue of the paper's group of 256 concurrent activations.
+    M must already be padded to a multiple of ``group_size``.
+
+    Returns int32 [M/group]: the minimum sufficient activation precision
+    of each group, clamped to the static profile ``max_bits`` (the
+    leading-one detector can report Pa+1 for the exact qmin value, which
+    the static planes already cover).
+    """
+    m, k = xq.shape
+    assert m % group_size == 0, (m, group_size)
+    eff = group_effective_bits(xq.reshape(m // group_size, group_size * k),
+                               group_size * k)
+    return jnp.minimum(eff.reshape(-1), max_bits).astype(jnp.int32)
 
 
 def dynamic_stats(xq: jax.Array, static_bits: int, group_size: int) -> dict:

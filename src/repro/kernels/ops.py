@@ -1,29 +1,34 @@
-"""Jit'd dispatch wrappers around the Pallas kernels.
+"""Serving-path orchestration around the backend op surface.
 
-``use_pallas`` selects between the Mosaic kernel (TPU) and the bit-identical
-XLA reference path (CPU dry-run / fallback). Model code calls only these.
+Model code dispatches through resolved ``LayerPlan``s (repro.api.plan);
+the functions here own the numeric orchestration that is identical on
+every backend — dynamic activation quantization, K-padding against the
+packed layout, plane-count detection, and the final dequantizing cast —
+and delegate the integer core to a ``repro.api.backend.Backend``.
+
+All entry points accept ``backend=`` (a Backend object or registered
+name). The deprecated ``use_pallas``/``interpret`` boolean pair is still
+honored when ``backend`` is None, resolving to one of the built-ins.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitpack, engine, quantize as q
-from repro.kernels import ref
-from repro.kernels.bitserial_conv import bitserial_conv
-from repro.kernels.bitserial_matmul import bitserial_matmul, bitserial_matmul_dynamic
-from repro.kernels.dynamic_quant import dynamic_quant
-from repro.kernels.flash_attention import flash_attention
+from repro.api.backend import resolve_backend
+from repro.core import bitpack, dynamic, quantize as q
 
 
 def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
-                      *, a_bits: int, w_bits: int,
-                      use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+                      *, a_bits: int, w_bits: int, backend=None,
+                      use_pallas: bool | None = None,
+                      interpret: bool | None = None) -> jax.Array:
     """Serving-path linear: activations dynamically quantized to a_bits,
     weights pre-packed bit-serially. Output in x.dtype.
 
     x: [..., K]; w_packed: uint8 [Pw, K//8, N]; w_scale: per-tensor f32.
     """
+    be = resolve_backend(backend, use_pallas, interpret)
     lead = x.shape[:-1]
     k = x.shape[-1]
     # Already-flat inputs skip the reshape round-trip entirely (XLA does
@@ -34,13 +39,76 @@ def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
         x2 = jnp.pad(x2, ((0, 0), (0, k8 - k)))
     a_bits = min(a_bits, 8)  # int8 kernel ABI; Pa>8 would wrap in astype
     xq, x_scale = q.quantize(x2, a_bits)
-    if use_pallas:
-        y = bitserial_matmul(xq.astype(jnp.int8), w_packed, w_bits=w_bits,
-                             interpret=interpret)
-    else:
-        y = ref.bitserial_matmul_ref(xq.astype(jnp.int8), w_packed, w_bits)
+    y = be.matmul_planes(xq.astype(jnp.int8), w_packed, w_bits=w_bits)
     # Single cast at the end: the int32 accumulate is scaled in f32 and
     # dropped straight to x.dtype (bf16 in, bf16 out — no double round).
+    out = (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
+    return out if x.ndim == 2 else out.reshape(*lead, -1)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def loom_linear_serve_dynamic(x: jax.Array, w_packed: jax.Array,
+                              w_scale: jax.Array, *, a_bits: int,
+                              w_bits: int, group_size: int = 256,
+                              backend=None, use_pallas: bool | None = None,
+                              interpret: bool | None = None) -> jax.Array:
+    """Dynamic-precision serving linear: runtime activation-plane trimming.
+
+    Loom's Lascorz-style path: activations are quantized on the SAME
+    per-tensor grid as the static path, then an OR-tree finds each group's
+    minimum sufficient precision and only that many ACTIVATION bit planes
+    execute — trimming below the static per-layer profile at runtime,
+    value-preserving (2's-complement truncation), so the result is
+    bit-identical to :func:`loom_linear_serve`.
+
+    Realization on the TPU kernel ABI: the matmul is transposed so the
+    activations become the plane-serial packed operand —
+
+        y.T[N, M] = Wq.T[N, K] @ Xq[K, M]
+
+    with ``Xq`` bit-interleaved [Pa, K/8, M] at runtime (the paper's
+    transposer writing ABout to AM) and per-group-of-``group_size``
+    columns plane counts fed to the scalar-prefetch kernel
+    (``bitserial_matmul_dynamic``), which skips whole planes per group.
+    Weights ride int8 MXU passes; Pw > 8 splits them into int8-safe
+    subplanes whose shifted partials accumulate exactly.
+    """
+    be = resolve_backend(backend, use_pallas, interpret)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x if x.ndim == 2 else x.reshape(-1, k)
+    k8 = w_packed.shape[1] * 8
+    if k8 != k:
+        x2 = jnp.pad(x2, ((0, 0), (0, k8 - k)))
+    a_bits = min(a_bits, 8)
+    xq, x_scale = q.quantize(x2, a_bits)          # static-path grid: parity
+    m = xq.shape[0]
+    # Group = group_size concurrently-processed rows; tiny batches clamp
+    # to one 8-row-aligned group rather than padding 256x.
+    g = min(group_size, _round_up(m, 8))
+    mp = _round_up(m, g)
+    if mp != m:
+        xq = jnp.pad(xq, ((0, mp - m), (0, 0)))   # zero rows: 1-bit floor
+    counts = dynamic.serve_group_counts(xq, g, a_bits)          # [mp/g]
+    x_packed = bitpack.pack_weights(xq.T, a_bits)  # [Pa, k8/8, mp]
+    wq = bitpack.unpack_weights(w_packed, w_bits)               # [k8, N]
+    if w_bits <= 8:
+        w_planes, shifts = wq[None], jnp.ones((1,), jnp.int32)
+    else:
+        # int8 MXU ABI: 7-bit subplanes keep every plane value in int8
+        # range (an unsigned 8-bit low plane would not fit).
+        w_planes, shifts = q.group_planes(wq, w_bits, 7)
+    yt = None
+    for i in range(w_planes.shape[0]):
+        part = be.matmul_planes_dynamic(
+            w_planes[i].T.astype(jnp.int8), x_packed, counts,
+            w_bits=a_bits, bn=g)                                # [N, mp]
+        part = part * shifts[i]
+        yt = part if yt is None else yt + part
+    y = yt.T[:m]
     out = (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
     return out if x.ndim == 2 else out.reshape(*lead, -1)
 
@@ -91,8 +159,9 @@ def int_conv_same(x_int: jax.Array, w4: jax.Array, stride: int,
 
 
 def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
-                    *, kernel: int, stride: int, a_bits: int,
-                    use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+                    *, kernel: int, stride: int, a_bits: int, backend=None,
+                    use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> jax.Array:
     """Serving-path fused conv: the CVL execution path.
 
     x: [B, H, W, C] float; w_packed: uint8 [Pw, ceil(k*k*C/8), N] in the
@@ -102,43 +171,34 @@ def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
     conv otherwise — neither materializes an im2col patch tensor in HBM).
     Output in x.dtype.
     """
+    be = resolve_backend(backend, use_pallas, interpret)
     w_bits = w_packed.shape[0]
     # int8 is the kernel ABI (one MXU pass per weight plane); higher
     # profile precisions clamp to 8 like serve_int8 — without this the
     # astype below would wrap Pa>8 values modulo 256.
     a_bits = min(a_bits, 8)
     xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
-    if use_pallas:
-        y = bitserial_conv(xq.astype(jnp.int8), w_packed, kernel=kernel,
-                           stride=stride, w_bits=w_bits, interpret=interpret)
-    else:
-        c = x.shape[-1]
-        kkc = kernel * kernel * c
-        wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)
-        y = int_conv_same(xq, wq.reshape(kernel, kernel, c, -1), stride,
-                          exact_f32=conv_accum_fits_f32(kkc, a_bits, w_bits))
+    y = be.conv_planes(xq, w_packed, kernel=kernel, stride=stride,
+                       w_bits=w_bits, a_bits=a_bits)
     return (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
 
 
 def quantize_activations(x: jax.Array, *, group_size: int = 256, bits: int = 8,
-                         use_pallas: bool = False, interpret: bool = True):
+                         backend=None, use_pallas: bool | None = None,
+                         interpret: bool | None = None):
     """Dynamic per-group activation quantization (Loom's runtime path)."""
+    be = resolve_backend(backend, use_pallas, interpret)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    if use_pallas:
-        xq, scale, eff = dynamic_quant(x2, group_size=group_size, bits=bits,
-                                       interpret=interpret)
-    else:
-        xq, scale, eff = ref.dynamic_quant_ref(x2, group_size, bits)
+    xq, scale, eff = be.dynamic_quant(x2, group_size=group_size, bits=bits)
     return (xq.reshape(*lead, -1), scale.reshape(*lead, -1),
             eff.reshape(*lead, -1))
 
 
 def attention(q_: jax.Array, k_: jax.Array, v_: jax.Array, *,
-              causal: bool = True, window: int | None = None,
-              use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+              causal: bool = True, window: int | None = None, backend=None,
+              use_pallas: bool | None = None,
+              interpret: bool | None = None) -> jax.Array:
     """Full-sequence attention ([B,H,S,D], KV already head-repeated)."""
-    if use_pallas:
-        return flash_attention(q_, k_, v_, causal=causal, window=window,
-                               interpret=interpret)
-    return ref.flash_attention_ref(q_, k_, v_, causal=causal, window=window)
+    be = resolve_backend(backend, use_pallas, interpret)
+    return be.attention(q_, k_, v_, causal=causal, window=window)

@@ -17,13 +17,13 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro import configs                                  # noqa: E402
+from repro.api import build_plan                           # noqa: E402
 from repro.dist import sharding                            # noqa: E402
 from repro.dist.sharding import resolve_tree               # noqa: E402
 from repro.launch import hloanalysis, shapes               # noqa: E402
 from repro.launch.mesh import make_production_mesh         # noqa: E402
 from repro.launch.serve import make_serve_fns              # noqa: E402
 from repro.launch.train import (TrainConfig, make_train_step)  # noqa: E402
-from repro.models import layers as L                       # noqa: E402
 from repro.optim import AdamWConfig                        # noqa: E402
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -171,7 +171,9 @@ def build_step(arch: str, shape_name: str, weights: str, exec_mode: str,
     cell = shapes.SHAPES[shape_name]
     from repro.core.policy import uniform_policy
     policy = uniform_policy(8, 8)
-    exec_cfg = L.ExecConfig(mode=exec_mode, policy=policy, use_pallas=False)
+    # Compiled per-layer plan on the XLA backend (the dry-run lowers the
+    # oracle paths; Mosaic kernels are out of scope for HLO analysis).
+    exec_cfg = build_plan(cfg, policy, mode=exec_mode, backend="xla")
 
     if cell.kind == "train":
         tc = TrainConfig(opt=AdamWConfig(

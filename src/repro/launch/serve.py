@@ -1,30 +1,35 @@
-"""Serving launcher: prefill + decode steps over the Loom execution modes.
+"""Serving launcher: prefill + decode steps over the Loom execution plans.
 
-``make_serve_fns`` returns jittable (prefill_step, decode_step) closed over
-the arch config and the execution mode:
+``repro.api.session.compile`` (a.k.a. ``loom.compile``) is the primary
+entry point now — it owns param conversion, cache init, and the jitted
+prefill/decode pair behind a ``ServingSession``. This module keeps:
 
-    dense         bf16 weights (DPNN-equivalent baseline)
-    serve_int8    LM_8b — int8 weights + dynamic activation quant
-    serve_packed  bit-serial planes (paper-faithful; Pw/16 weight bytes)
+  * ``make_serve_fns`` / ``jit_serve_steps``: thin launch-layer wrappers
+    used by the multi-pod dry-run (which jits against ShapeDtypeStructs
+    and production meshes rather than real params);
+  * the CPU demo driver (``python -m repro.launch.serve``), which runs
+    either through the new session API (``--api session``, default) or
+    the deprecated ``ExecConfig`` shim (``--api shim``) — both produce
+    identical generations for the same seed.
 
-The CPU driver below runs continuous batched decoding with a simple
-request queue (arrivals join at slot boundaries), demonstrating the
-serving shape the decode_32k/long_500k cells lower.
+Modes: dense (DPNN-equivalent baseline), serve_int8 (LM_8b), serve_packed
+(bit-serial planes; Pw/16 weight bytes; ``--dynamic-a`` adds runtime
+per-group activation-plane trimming on the linears).
 """
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.dist.sharding import resolve_tree
-from repro.models import layers as L, model as M
+from repro.api import backend as backendlib
+from repro.models import model as M
 
 
-def make_serve_fns(cfg, exec_cfg: L.ExecConfig):
+def make_serve_fns(cfg, exec_cfg):
+    """(prefill_step, decode_step) closed over cfg + plan (or shim)."""
     def prefill_step(params, tokens, cache, img_embeds=None):
         return M.prefill(params, cfg, tokens, cache, exec_cfg, img_embeds)
 
@@ -36,50 +41,32 @@ def make_serve_fns(cfg, exec_cfg: L.ExecConfig):
 
 def jit_serve_steps(cfg, exec_cfg, mesh, param_specs, cache_specs,
                     batch_structs_specs=None):
-    prefill_fn, decode_fn = make_serve_fns(cfg, exec_cfg)
-    from jax.sharding import PartitionSpec as PS
-    psh = resolve_tree(param_specs, mesh)
-    csh = resolve_tree(cache_specs, mesh)
-    tok_sh = resolve_tree(PS("dp"), mesh)
-    toks_sh = resolve_tree(PS("dp", None), mesh)
-    prefill_j = jax.jit(prefill_fn,
-                        in_shardings=(psh, toks_sh, csh),
-                        out_shardings=(None, csh))
-    decode_j = jax.jit(decode_fn,
-                       in_shardings=(psh, tok_sh, None, csh),
-                       out_shardings=(None, csh),
-                       donate_argnums=(3,))
-    return prefill_j, decode_j
+    """Sharding-jitted (prefill, decode). One implementation, shared with
+    the session API (repro.api.session._jit_lm) so the wiring cannot
+    drift between the launch layer and ServingSession."""
+    from repro.api.session import _jit_lm
+    return _jit_lm(cfg, exec_cfg, mesh, param_specs, cache_specs)
 
 
 # ---------------------------------------------------------------------------
 # CPU-scale batched-serving driver
 # ---------------------------------------------------------------------------
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--mode", default="serve_int8",
-                    choices=["dense", "serve_int8", "serve_packed"])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--a-bits", type=int, default=8)
-    ap.add_argument("--w-bits", type=int, default=8)
-    args = ap.parse_args(argv)
-
+def _generate_shim(cfg, args, policy):
+    """The seed-era wiring, kept verbatim behind the ExecConfig shim."""
     import numpy as np
-    from repro.core.policy import uniform_policy
+    from repro.models import layers as L
 
-    cfg = configs.get(args.arch, smoke=True)
-    policy = uniform_policy(args.a_bits, args.w_bits)
     params, specs = M.init_params(jax.random.PRNGKey(0), cfg)
     if args.mode != "dense":
         params, specs = M.convert_params_for_serving(params, specs, policy,
                                                      args.mode)
         print(f"[serve] packed weights for mode={args.mode} "
               f"(Pw={args.w_bits}: weight bytes x{args.w_bits}/16 of bf16)")
-    exec_cfg = L.ExecConfig(mode=args.mode, policy=policy)
+    use_pallas = args.backend != "xla"
+    interpret = args.backend != "pallas_tpu"
+    exec_cfg = L.ExecConfig(mode=args.mode, policy=policy,
+                            use_pallas=use_pallas, interpret=interpret)
     prefill_fn, decode_fn = make_serve_fns(cfg, exec_cfg)
     prefill_fn = jax.jit(prefill_fn)
     decode_fn = jax.jit(decode_fn, donate_argnums=(3,))
@@ -96,8 +83,60 @@ def main(argv=None):
         logits, cache = decode_fn(params, tok, pos, cache)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(np.asarray(tok))
-    gen = np.stack(out, axis=1)
-    print(f"[serve] generated {gen.shape} tokens; first row: {gen[0][:8]}...")
+    return np.stack(out, axis=1)
+
+
+def _generate_session(cfg, args, policy):
+    """The same serving cell through loom.compile()."""
+    import numpy as np
+    from repro.api import session as loom
+
+    sess = loom.compile(cfg, policy, mode=args.mode, backend=args.backend,
+                        rng=0)
+    if args.mode != "dense":
+        print(f"[serve] packed weights for mode={args.mode} "
+              f"(Pw={args.w_bits}: weight bytes x{args.w_bits}/16 of bf16)")
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab,
+                                      size=(args.batch, args.prompt_len)),
+                         jnp.int32)
+    return sess.generate(tokens, args.gen_len)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--mode", default="serve_int8",
+                    choices=["dense", "serve_int8", "serve_packed"])
+    ap.add_argument("--api", default="session", choices=["session", "shim"],
+                    help="session = loom.compile ServingSession; "
+                         "shim = deprecated ExecConfig wiring")
+    ap.add_argument("--backend", default="xla",
+                    choices=list(backendlib.list_backends()))
+    ap.add_argument("--dynamic-a", action="store_true",
+                    help="runtime per-group activation-plane trimming "
+                         "(serve_packed linears)")
+    ap.add_argument("--group-size", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--a-bits", type=int, default=8)
+    ap.add_argument("--w-bits", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    from repro.core.policy import uniform_policy
+
+    cfg = configs.get(args.arch, smoke=True)
+    policy = uniform_policy(args.a_bits, args.w_bits,
+                            dynamic_a=args.dynamic_a)
+    if args.dynamic_a:
+        import dataclasses as dc
+        policy = dc.replace(policy, group_size=args.group_size)
+    gen_fn = _generate_session if args.api == "session" else _generate_shim
+    gen = gen_fn(cfg, args, policy)
+    print(f"[serve] generated {gen.shape} tokens via {args.api} "
+          f"({args.backend}{', dynamic-a' if args.dynamic_a else ''}); "
+          f"first row: {gen[0][:8]}...")
     print("done")
 
 

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from repro.api import plan as planlib
 from repro.models import layers as L
 
 
@@ -82,19 +83,24 @@ def _im2col(x: jax.Array, kernel: int, stride: int) -> jax.Array:
     return jnp.concatenate(cols, axis=-1)
 
 
-def forward(params, cfg: CNNConfig, x: jax.Array, exec_cfg: L.ExecConfig,
+def forward(params, cfg: CNNConfig, x: jax.Array, exec_cfg,
             collect_activations: bool = False):
-    """x: [B, H, W, C] f32 -> logits [B, n_classes] (+ per-layer inputs)."""
+    """x: [B, H, W, C] f32 -> logits [B, n_classes] (+ per-layer inputs).
+
+    ``exec_cfg``: an ExecutionPlan or the deprecated ExecConfig shim."""
+    xplan = planlib.as_plan(exec_cfg)
     acts = {}
     for c in cfg.convs:
         if collect_activations:
             acts[c.name] = x
-        if exec_cfg.conv_mode == "fused":
+        lp = xplan.layer(c.name, kind="conv", kernel=c.kernel,
+                         stride=c.stride)
+        if lp.conv_route == "fused":
             y = L.conv_apply(params[c.name], x, c.kernel, c.stride,
-                             exec_cfg, c.name)
+                             xplan, c.name)
         else:  # legacy HBM-materializing lowering (A/B baseline)
             patches = _im2col(x, c.kernel, c.stride)
-            y = L.linear_apply(params[c.name], patches, exec_cfg, c.name)
+            y = L.linear_apply(params[c.name], patches, xplan, c.name)
         y = jax.nn.relu(y)
         if c.pool > 1:
             b, h, w, ch = y.shape
@@ -105,7 +111,7 @@ def forward(params, cfg: CNNConfig, x: jax.Array, exec_cfg: L.ExecConfig,
     for i in range(len(cfg.fcs)):
         if collect_activations:
             acts[f"fc{i}"] = x
-        x = L.linear_apply(params[f"fc{i}"], x, exec_cfg, f"fc{i}")
+        x = L.linear_apply(params[f"fc{i}"], x, xplan, f"fc{i}")
         if i < len(cfg.fcs) - 1:
             x = jax.nn.relu(x)
     if collect_activations:

@@ -1,22 +1,37 @@
-"""Common layers: RMSNorm, RoPE, embeddings, and LoomLinear.
+"""Common layers: RMSNorm, RoPE, embeddings, and the Loom linear/conv.
 
-LoomLinear is the integration point of the paper's technique: every matmul
-in every architecture flows through it, dispatching on the layer's
-execution mode:
+Every matmul and convolution in every architecture flows through
+``linear_apply`` / ``conv_apply``. Dispatch is NOT a string-mode if/elif
+chain anymore: each call asks the model's ``ExecutionPlan``
+(repro.api.plan) for the layer's resolved ``LayerPlan`` — kind, route,
+(Pa, Pw), dynamic-trim group config, conv geometry, backend — and jumps
+straight to that route's handler. Plans are resolved once per layer at
+compile/conversion time; the per-call policy string matching and the
+``use_pallas``/``interpret`` boolean threading of the seed repo are gone.
+
+Routes (see repro.api.plan):
 
     dense        bf16 matmul              (DPNN-equivalent TPU baseline)
     fake_quant   QAT: STE fake-quant of activations (Pa) and weights (Pw),
                  then a dense matmul — the training-time integration of the
                  per-layer precision profiles.
-    serve_int8   LM_8b: dynamic activation quant + int8 weights stored in
+    int8         LM_8b: dynamic activation quant + int8 weights stored in
                  the param tree, one int8 MXU pass. Weight bytes = 8/16.
-    serve_packed paper-faithful bit-serial path: weights stored bit-packed
+    packed       paper-faithful bit-serial path: weights stored bit-packed
                  [Pw, K/8, N] in the param tree; bytes = Pw/16 of bf16;
-                 Pw plane passes (Pallas kernel on TPU, XLA oracle off-TPU).
+                 Pw plane passes on the plan's backend. With
+                 ``policy.dynamic_a`` the linear route trims ACTIVATION
+                 planes per group of concurrently-processed rows at
+                 runtime (Lascorz OR-tree; bit-identical to static).
 
-Serving modes require ``convert_params_for_serving`` to be run once over
+Serving routes require ``convert_params_for_serving`` to be run once over
 the trained param tree (it replaces each linear's "w" with the quantized /
 packed representation — the paper's offline weight packing step).
+
+``ExecConfig`` survives ONLY as a deprecated shim: it builds an
+``ExecutionPlan`` on first use (``as_plan``) so seed-era tests, examples,
+and A/B benchmarks keep running. New code should call
+``repro.api.build_plan`` / ``loom.compile`` directly.
 
 Params are plain nested dicts; a parallel dict of PartitionSpec with
 LOGICAL axis names ("fsdp"/"tp"/None, resolved by repro.dist.sharding)
@@ -30,6 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from repro.api import plan as planlib
+from repro.api.backend import resolve_backend
 from repro.core import bitpack, quantize as q
 from repro.core.policy import PrecisionPolicy
 from repro.kernels import ops
@@ -37,14 +54,28 @@ from repro.kernels import ops
 
 @dataclasses.dataclass(frozen=True)
 class ExecConfig:
-    """How linears execute. ``mode`` as in the module docstring."""
+    """DEPRECATED shim over repro.api: string mode + boolean kernel flags.
+
+    Kept so existing call sites keep working; ``as_plan()`` compiles it to
+    an ``ExecutionPlan`` once (memoized per instance) and every apply-path
+    consumer dispatches on that plan. Prefer ``repro.api.build_plan`` (or
+    ``loom.compile`` for serving) in new code.
+    """
     mode: str = "dense"              # dense | fake_quant | serve_int8 | serve_packed
     policy: PrecisionPolicy = PrecisionPolicy()
-    use_pallas: bool = False         # Mosaic kernels (TPU) vs XLA oracle path
-    interpret: bool = True           # Pallas interpret mode (CPU validation)
-    conv_mode: str = "fused"         # fused (implicit-im2col conv path) |
-    #                                  im2col (legacy HBM patch materialization,
-    #                                  kept for A/B benchmarking only)
+    use_pallas: bool = False         # deprecated: selects a backend
+    interpret: bool = True           # deprecated: selects a backend
+    conv_mode: str = "fused"         # fused | im2col (legacy A/B lowering)
+
+    def as_plan(self) -> planlib.ExecutionPlan:
+        built = self.__dict__.get("_plan")
+        if built is None:
+            built = planlib.build_plan(
+                None, policy=self.policy, mode=self.mode,
+                backend=resolve_backend(None, self.use_pallas, self.interpret),
+                conv_route=self.conv_mode)
+            object.__setattr__(self, "_plan", built)
+        return built
 
 
 def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -89,34 +120,61 @@ def linear_init(key, d_in: int, d_out: int, in_axis=None, out_axis=None,
     return {"w": w.astype(dtype)}, {"w": PS(in_axis, out_axis)}
 
 
-def linear_apply(p: dict, x: jax.Array, exec_cfg: ExecConfig,
-                 layer_name: str = "") -> jax.Array:
-    """Dispatch a linear through the configured Loom execution mode."""
-    mode = exec_cfg.mode
-    if mode == "dense":
-        return x @ p["w"].astype(x.dtype)
-    prec = exec_cfg.policy.lookup(layer_name)
-    if mode == "fake_quant":
-        xq = q.fake_quant(x, prec.a_bits)
-        wq = q.fake_quant(p["w"].astype(jnp.float32), prec.w_bits).astype(x.dtype)
-        return xq @ wq
-    if mode == "serve_int8":
-        # LM_8b: one int8 MXU pass against pre-quantized weights.
-        xq, x_scale = q.quantize(x.astype(jnp.float32), min(prec.a_bits, 8))
-        y = jax.lax.dot_general(
-            xq.astype(jnp.int8), p["wq"],
-            (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        return (y.astype(jnp.float32) * (x_scale * p["w_scale"])).astype(x.dtype)
-    if mode == "serve_packed":
-        # Paper-faithful bit-serial path over pre-packed planes. The
-        # weight precision is intrinsic to the packed tensor (its plane
-        # dim) — the policy only sets the activation precision.
-        return ops.loom_linear_serve(
-            x, p["w_packed"], p["w_scale"], a_bits=prec.a_bits,
-            w_bits=p["w_packed"].shape[0], use_pallas=exec_cfg.use_pallas,
-            interpret=exec_cfg.interpret)
-    raise ValueError(mode)
+# ---------------------------------------------------------------------------
+# Route handlers: one function per LayerPlan route, dispatch by dict.
+# ---------------------------------------------------------------------------
+
+def _linear_dense(p, x, lp, be):
+    return x @ p["w"].astype(x.dtype)
+
+
+def _linear_fake_quant(p, x, lp, be):
+    xq = q.fake_quant(x, lp.a_bits)
+    wq = q.fake_quant(p["w"].astype(jnp.float32), lp.w_bits).astype(x.dtype)
+    return xq @ wq
+
+
+def _linear_int8(p, x, lp, be):
+    # LM_8b: one int8 MXU pass against pre-quantized weights.
+    xq, x_scale = q.quantize(x.astype(jnp.float32), min(lp.a_bits, 8))
+    y = jax.lax.dot_general(
+        xq.astype(jnp.int8), p["wq"],
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (y.astype(jnp.float32) * (x_scale * p["w_scale"])).astype(x.dtype)
+
+
+def _linear_packed(p, x, lp, be):
+    # Paper-faithful bit-serial path over pre-packed planes. The weight
+    # precision is intrinsic to the packed tensor (its plane dim) — the
+    # plan only sets the activation precision. ``dynamic_a`` routes
+    # through the runtime activation-plane-trimming kernel.
+    if lp.dynamic_a:
+        return ops.loom_linear_serve_dynamic(
+            x, p["w_packed"], p["w_scale"], a_bits=lp.a_bits,
+            w_bits=p["w_packed"].shape[0], group_size=lp.group_size,
+            backend=be)
+    return ops.loom_linear_serve(
+        x, p["w_packed"], p["w_scale"], a_bits=lp.a_bits,
+        w_bits=p["w_packed"].shape[0], backend=be)
+
+
+_LINEAR_ROUTES = {
+    planlib.DENSE: _linear_dense,
+    planlib.FAKE_QUANT: _linear_fake_quant,
+    planlib.INT8: _linear_int8,
+    planlib.PACKED: _linear_packed,
+}
+
+
+def linear_apply(p: dict, x: jax.Array, exec_cfg, layer_name: str = "") -> jax.Array:
+    """Dispatch a linear through its resolved LayerPlan.
+
+    ``exec_cfg``: an ``ExecutionPlan`` (preferred) or a deprecated
+    ``ExecConfig`` shim (compiled to a plan on first use)."""
+    xplan = planlib.as_plan(exec_cfg)
+    lp = xplan.layer(layer_name, kind="linear")
+    return _LINEAR_ROUTES[lp.route](p, x, lp, xplan.backend)
 
 
 def _conv_same(x: jax.Array, w4: jax.Array, stride: int,
@@ -130,75 +188,113 @@ def _conv_same(x: jax.Array, w4: jax.Array, stride: int,
         preferred_element_type=preferred)
 
 
+def _as_hwio(w2, kernel, c_in):
+    return w2.reshape(kernel, kernel, c_in, -1)
+
+
+def _conv_dense(p, x, kernel, stride, lp, be):
+    return _conv_same(x, _as_hwio(p["w"], kernel, x.shape[-1]).astype(x.dtype),
+                      stride)
+
+
+def _conv_fake_quant(p, x, kernel, stride, lp, be):
+    xq = q.fake_quant(x, lp.a_bits)
+    wq = q.fake_quant(p["w"].astype(jnp.float32), lp.w_bits).astype(x.dtype)
+    return _conv_same(xq, _as_hwio(wq, kernel, x.shape[-1]), stride)
+
+
+def _conv_int8(p, x, kernel, stride, lp, be):
+    c_in = x.shape[-1]
+    a_bits = min(lp.a_bits, 8)
+    xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
+    y = ops.int_conv_same(
+        xq, _as_hwio(p["wq"], kernel, c_in), stride,
+        exact_f32=ops.conv_accum_fits_f32(kernel * kernel * c_in, a_bits, 8))
+    return (y * (x_scale * p["w_scale"]).astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_packed(p, x, kernel, stride, lp, be):
+    # Dynamic per-group activation planes for the conv kernel are still a
+    # ROADMAP item; the packed conv always runs the static plane count.
+    return ops.loom_conv_serve(
+        x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
+        a_bits=lp.a_bits, backend=be)
+
+
+_CONV_ROUTES = {
+    planlib.DENSE: _conv_dense,
+    planlib.FAKE_QUANT: _conv_fake_quant,
+    planlib.INT8: _conv_int8,
+    planlib.PACKED: _conv_packed,
+}
+
+
 def conv_apply(p: dict, x: jax.Array, kernel: int, stride: int,
-               exec_cfg: ExecConfig, layer_name: str = "") -> jax.Array:
-    """Dispatch a convolution through the configured Loom execution mode.
+               exec_cfg, layer_name: str = "") -> jax.Array:
+    """Dispatch a convolution through its resolved LayerPlan.
 
     Weights live in the param tree in the SAME 2-D [k*k*Cin, Cout] matrix
     layout as linears (row order (di, dj, c)), so precision profiling,
-    serving conversion, and bit-packing are shared with LoomLinear. All
-    four modes run FUSED convs — the window walk happens inside
+    serving conversion, and bit-packing are shared with the linear path.
+    All routes run FUSED convs — the window walk happens inside
     lax.conv_general_dilated or the Pallas kernel, never as an HBM patch
     tensor.
     """
-    mode = exec_cfg.mode
-    c_in = x.shape[-1]
+    xplan = planlib.as_plan(exec_cfg)
+    lp = xplan.layer(layer_name, kind="conv", kernel=kernel, stride=stride)
+    return _CONV_ROUTES[lp.route](p, x, kernel, stride, lp, xplan.backend)
 
-    def as_hwio(w2):
-        return w2.reshape(kernel, kernel, c_in, -1)
 
-    if mode == "dense":
-        return _conv_same(x, as_hwio(p["w"]).astype(x.dtype), stride)
-    prec = exec_cfg.policy.lookup(layer_name)
-    if mode == "fake_quant":
-        xq = q.fake_quant(x, prec.a_bits)
-        wq = q.fake_quant(p["w"].astype(jnp.float32), prec.w_bits).astype(x.dtype)
-        return _conv_same(xq, as_hwio(wq), stride)
-    if mode == "serve_int8":
-        a_bits = min(prec.a_bits, 8)
-        xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
-        y = ops.int_conv_same(
-            xq, as_hwio(p["wq"]), stride,
-            exact_f32=ops.conv_accum_fits_f32(kernel * kernel * c_in,
-                                              a_bits, 8))
-        return (y * (x_scale * p["w_scale"]).astype(jnp.float32)).astype(x.dtype)
-    if mode == "serve_packed":
-        return ops.loom_conv_serve(
-            x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
-            a_bits=prec.a_bits, use_pallas=exec_cfg.use_pallas,
-            interpret=exec_cfg.interpret)
-    raise ValueError(mode)
+# ---------------------------------------------------------------------------
+# Offline weight packing (the paper's bit-interleaved storage step).
+# Converters are registered per serving mode — no mode string comparisons.
+# ---------------------------------------------------------------------------
+
+def _convert_linear_int8(p, prec):
+    wq, w_scale = q.quantize(p["w"].astype(jnp.float32), 8)
+    return {"wq": wq.astype(jnp.int8), "w_scale": w_scale.astype(jnp.float32)}
+
+
+def _convert_linear_packed(p, prec):
+    wq, w_scale = q.quantize(p["w"].astype(jnp.float32), prec.w_bits)
+    return {"w_packed": bitpack.pack_weights(wq, prec.w_bits),
+            "w_scale": w_scale.astype(jnp.float32)}
+
+
+_LINEAR_CONVERTERS = {"serve_int8": _convert_linear_int8,
+                      "serve_packed": _convert_linear_packed}
+
+# The ONLY place the packed/int8 linear PartitionSpecs are written down:
+# the param converter and the spec-only walk both read this table, so the
+# real-conversion and eval_shape/dry-run paths cannot drift.
+_LINEAR_SPEC_CONVERTERS = {
+    "serve_int8": lambda in_ax, out_ax: {"wq": PS(in_ax, out_ax),
+                                         "w_scale": PS(None, None)},
+    "serve_packed": lambda in_ax, out_ax: {"w_packed": PS(None, in_ax, out_ax),
+                                           "w_scale": PS(None, None)},
+}
 
 
 def convert_linear_for_serving(p: dict, spec: dict, prec, mode: str):
-    """Offline weight packing (the paper's bit-interleaved storage step).
+    """Offline weight packing for one linear. Returns (params, specs).
 
-    Returns (new_params, new_specs) for one linear. For serve_packed the
-    packed tensor's K/8 axis inherits the input sharding and N the output
-    sharding; planes replicated.
+    For serve_packed the packed tensor's K/8 axis inherits the input
+    sharding and N the output sharding; planes replicated.
     """
-    w = p["w"].astype(jnp.float32)
-    in_ax, out_ax = spec["w"][0], spec["w"][1]
-    if mode == "serve_int8":
-        wq, w_scale = q.quantize(w, 8)
-        return ({"wq": wq.astype(jnp.int8), "w_scale": w_scale.astype(jnp.float32)},
-                {"wq": PS(in_ax, out_ax), "w_scale": PS(None, None)})
-    if mode == "serve_packed":
-        wq, w_scale = q.quantize(w, prec.w_bits)
-        packed = bitpack.pack_weights(wq, prec.w_bits)
-        return ({"w_packed": packed, "w_scale": w_scale.astype(jnp.float32)},
-                {"w_packed": PS(None, in_ax, out_ax), "w_scale": PS(None, None)})
-    raise ValueError(mode)
+    try:
+        converter = _LINEAR_CONVERTERS[mode]
+    except KeyError:
+        raise ValueError(mode) from None
+    return converter(p, prec), convert_linear_specs(spec, mode)
 
 
 def convert_linear_specs(spec: dict, mode: str) -> dict:
     """Spec-only counterpart of convert_linear_for_serving."""
-    in_ax, out_ax = spec["w"][0], spec["w"][1]
-    if mode == "serve_int8":
-        return {"wq": PS(in_ax, out_ax), "w_scale": PS(None, None)}
-    if mode == "serve_packed":
-        return {"w_packed": PS(None, in_ax, out_ax), "w_scale": PS(None, None)}
-    raise ValueError(mode)
+    try:
+        converter = _LINEAR_SPEC_CONVERTERS[mode]
+    except KeyError:
+        raise ValueError(mode) from None
+    return converter(spec["w"][0], spec["w"][1])
 
 
 def is_linear(p) -> bool:

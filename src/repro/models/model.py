@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from repro.api.plan import PARAM_CLASS_NAMES as _CLASS_NAMES
 from repro.core import bitpack, quantize as quant
 from repro.dist.sharding import constraint
 from repro.models import attention, layers as L, transformer as T
@@ -206,12 +207,9 @@ _EXPERT_KEYS = ("w_gate", "w_up", "w_down")
 
 _SKIP_LINEARS = ("router", "conv")  # tiny/accuracy-critical or depthwise conv
 
-# param-tree key -> the apply-time layer-class name used by PrecisionPolicy
-_CLASS_NAMES = {"wq": "attn_q", "wk": "attn_k", "wv": "attn_v",
-                "wo": "attn_o", "w_gate": "ffn_gate", "w_up": "ffn_up",
-                "w_down": "ffn_down", "head": "lm_head",
-                "in_x": "ssm_x", "in_z": "ssm_z", "in_B": "ssm_B",
-                "in_C": "ssm_C", "in_dt": "ssm_dt", "out": "ssm_out"}
+# _CLASS_NAMES (param-tree key -> apply-time layer-class name used by
+# PrecisionPolicy) is imported from repro.api.plan — the canonical table
+# lives next to the plan builder.
 
 
 def _policy_key(path) -> str:
@@ -286,13 +284,8 @@ def convert_specs_for_serving(param_structs, specs, mode: str):
             news = {}
             for k in p:
                 if k in _EXPERT_KEYS and getattr(p[k], "ndim", 0) == 3:
-                    e_ax, in_ax, out_ax = s[k][0], s[k][1], s[k][2]
-                    if mode == "serve_int8":
-                        news[k] = {"wq": PS(e_ax, in_ax, out_ax),
-                                   "scale": PS(e_ax)}
-                    else:
-                        news[k] = {"w_packed": PS(e_ax, None, in_ax, out_ax),
-                                   "scale": PS(e_ax)}
+                    news[k] = _EXPERT_SPEC_CONVERTERS[mode](
+                        s[k][0], s[k][1], s[k][2])
                 else:
                     news[k] = walk(p[k], s[k], path + (k,))
             return news
@@ -325,21 +318,39 @@ def convert_structs_for_serving(param_structs, specs, policy, mode: str):
     return new_p, new_s
 
 
+def _convert_expert_int8(wf, prec):
+    scale = quant.compute_scale(wf, 8, axis=(1, 2))
+    wq = jnp.clip(jnp.round(wf / scale), -128, 127).astype(jnp.int8)
+    return {"wq": wq, "scale": scale.reshape(-1)}
+
+
+def _convert_expert_packed(wf, prec):
+    bits = prec.w_bits
+    scale = quant.compute_scale(wf, bits, axis=(1, 2))
+    wq = jnp.clip(jnp.round(wf / scale), quant.qmin(bits),
+                  quant.qmax(bits)).astype(jnp.int32)
+    packed = jax.vmap(lambda m: bitpack.pack_weights(m, bits))(wq)
+    return {"w_packed": packed, "scale": scale.reshape(-1)}
+
+
+_EXPERT_CONVERTERS = {"serve_int8": _convert_expert_int8,
+                      "serve_packed": _convert_expert_packed}
+
+# Single source of truth for the per-expert packed PartitionSpecs — the
+# param conversion and the spec-only walk both read this table.
+_EXPERT_SPEC_CONVERTERS = {
+    "serve_int8": lambda e_ax, in_ax, out_ax: {
+        "wq": PS(e_ax, in_ax, out_ax), "scale": PS(e_ax)},
+    "serve_packed": lambda e_ax, in_ax, out_ax: {
+        "w_packed": PS(e_ax, None, in_ax, out_ax), "scale": PS(e_ax)},
+}
+
+
 def _convert_expert(w, spec, prec, mode):
     """w: [E, din, dout] -> per-expert quantized/packed."""
-    e_ax, in_ax, out_ax = spec[0], spec[1], spec[2]
-    wf = w.astype(jnp.float32)
-    if mode == "serve_int8":
-        scale = quant.compute_scale(wf, 8, axis=(1, 2))
-        wq = jnp.clip(jnp.round(wf / scale), -128, 127).astype(jnp.int8)
-        return ({"wq": wq, "scale": scale.reshape(-1)},
-                {"wq": PS(e_ax, in_ax, out_ax), "scale": PS(e_ax)})
-    if mode == "serve_packed":
-        bits = prec.w_bits
-        scale = quant.compute_scale(wf, bits, axis=(1, 2))
-        wq = jnp.clip(jnp.round(wf / scale), quant.qmin(bits),
-                      quant.qmax(bits)).astype(jnp.int32)
-        packed = jax.vmap(lambda m: bitpack.pack_weights(m, bits))(wq)
-        return ({"w_packed": packed, "scale": scale.reshape(-1)},
-                {"w_packed": PS(e_ax, None, in_ax, out_ax), "scale": PS(e_ax)})
-    raise ValueError(mode)
+    try:
+        converter = _EXPERT_CONVERTERS[mode]
+    except KeyError:
+        raise ValueError(mode) from None
+    return (converter(w.astype(jnp.float32), prec),
+            _EXPERT_SPEC_CONVERTERS[mode](spec[0], spec[1], spec[2]))

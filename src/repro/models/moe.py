@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from repro.api import plan as planlib
 from repro.core import bitpack, quantize as quant
 from repro.dist.sharding import constraint
 from repro.models import layers as L
@@ -120,10 +121,10 @@ def apply(p, cfg: MoEConfig, x: jax.Array, exec_cfg: L.ExecConfig):
     e, k = cfg.n_experts, cfg.top_k
     cap = max(1, int(s * k / e * cfg.capacity_factor))
 
+    lp = planlib.as_plan(exec_cfg).layer("moe_expert")
     xr = x
-    if exec_cfg.mode == "fake_quant":
-        prec = exec_cfg.policy.lookup("moe_expert")
-        xr = quant.fake_quant(x, prec.a_bits)
+    if lp.route == planlib.FAKE_QUANT:
+        xr = quant.fake_quant(x, lp.a_bits)
 
     logits = x.astype(jnp.float32) @ p["router"]["w"]              # [B,S,E]
     probs, ids, aux = _route(logits, cfg)                          # [B,S,k]
@@ -147,8 +148,8 @@ def apply(p, cfg: MoEConfig, x: jax.Array, exec_cfg: L.ExecConfig):
     h_g = _expert_mm(buf, p, "w_gate", x.dtype)
     h_u = _expert_mm(buf, p, "w_up", x.dtype)
     h = L.activation_fn(cfg.activation)(h_g) * h_u
-    if exec_cfg.mode == "fake_quant":
-        h = quant.fake_quant(h, exec_cfg.policy.lookup("moe_expert").a_bits)
+    if lp.route == planlib.FAKE_QUANT:
+        h = quant.fake_quant(h, lp.a_bits)
     out_buf = _expert_mm(h, p, "w_down", x.dtype)                  # [B,E,C,d]
     out_flat = jnp.concatenate(
         [out_buf.reshape(b, e * cap, d),
@@ -185,7 +186,7 @@ def apply(p, cfg: MoEConfig, x: jax.Array, exec_cfg: L.ExecConfig):
 # ---------------------------------------------------------------------------
 
 def _local_moe(cfg: MoEConfig, e_local: int, tp_axis: str, x_l, rw,
-               wg, wu, wd, shared_wg, shared_wu, shared_wd, exec_mode,
+               wg, wu, wd, shared_wg, shared_wu, shared_wd, fake_quant,
                a_bits, has_shared):
     """Per-rank body under shard_map. x_l: [B_l, S, d] (local batch rows,
     full seq, full d). Expert weights: local [e_local, d, f] shards."""
@@ -196,7 +197,7 @@ def _local_moe(cfg: MoEConfig, e_local: int, tp_axis: str, x_l, rw,
     rank = jax.lax.axis_index(tp_axis)
 
     xr = x_l
-    if exec_mode == "fake_quant":
+    if fake_quant:
         xr = quant.fake_quant(x_l, a_bits)
 
     logits = x_l.astype(jnp.float32) @ rw                 # replicated math
@@ -219,7 +220,7 @@ def _local_moe(cfg: MoEConfig, e_local: int, tp_axis: str, x_l, rw,
     h_g = jnp.einsum("becd,edf->becf", buf, wg.astype(buf.dtype))
     h_u = jnp.einsum("becd,edf->becf", buf, wu.astype(buf.dtype))
     h = L.activation_fn(cfg.activation)(h_g) * h_u
-    if exec_mode == "fake_quant":
+    if fake_quant:
         h = quant.fake_quant(h, a_bits)
     out_buf = jnp.einsum("becf,efd->becd", h, wd.astype(h.dtype))
     out_flat = jnp.concatenate(
@@ -262,12 +263,12 @@ def apply_shardmap(p, cfg: MoEConfig, x: jax.Array, exec_cfg: L.ExecConfig):
     e_local = cfg.n_experts // tp
     dp_spec = dp_axis if isinstance(dp_axis, (str, tuple)) else None
 
-    a_bits = exec_cfg.policy.lookup("moe_expert").a_bits
+    lp = planlib.as_plan(exec_cfg).layer("moe_expert")
     has_shared = cfg.n_shared > 0
     sh = p.get("shared", {})
     fn = functools.partial(_local_moe, cfg, e_local, tp_axis,
-                           exec_mode=exec_cfg.mode, a_bits=a_bits,
-                           has_shared=has_shared)
+                           fake_quant=(lp.route == planlib.FAKE_QUANT),
+                           a_bits=lp.a_bits, has_shared=has_shared)
 
     in_specs = (P(dp_spec, None, None),            # x
                 P(None, None),                     # router
