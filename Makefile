@@ -7,23 +7,33 @@ PY ?= python
 # narrow on purpose — the seed tree predates the lint config).
 LINT_PATHS = src/repro/api \
              src/repro/kernels/ops.py \
+             src/repro/kernels/bitserial_conv.py \
              src/repro/models/layers.py \
              src/repro/models/cnn.py \
              src/repro/core/dynamic.py \
              src/repro/launch/serve.py \
              benchmarks/kernelbench.py \
-             tests/test_api.py
+             benchmarks/bench_compare.py \
+             tests/test_api.py \
+             tests/test_conv_dynamic.py
 
-.PHONY: test bench bench-smoke lint
+.PHONY: test bench bench-smoke bench-check lint
 
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q --durations=15
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/kernelbench.py
 
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/kernelbench.py --smoke
+
+# Bench-regression gate: fresh smoke run diffed against the committed
+# BENCH_kernel.json (modeled speedup / effective-plane fields, 15%
+# tolerance; accounting laws exact). CI's bench-regression job.
+bench-check:
+	PYTHONPATH=src $(PY) benchmarks/kernelbench.py --smoke --out /tmp/BENCH_fresh.json
+	PYTHONPATH=src $(PY) benchmarks/bench_compare.py --baseline BENCH_kernel.json --fresh /tmp/BENCH_fresh.json
 
 lint:
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \

@@ -1,0 +1,120 @@
+"""Bench-regression gate: diff a fresh kernelbench run against the
+committed BENCH_kernel.json.
+
+CPU wall-times of this container are noise; what must NOT regress are the
+MODELED quantities the paper's claims rest on:
+
+  * ``modeled_speedup`` / ``mean_effective_planes`` /
+    ``plane_fraction_executed`` of every ``dynamic_serve_*`` and
+    ``dynamic_conv_*`` entry — the runtime-trimming trend — compared
+    within a relative tolerance (default 15%: the inputs are seeded, so
+    drift means a real change in counts, quantization, or grouping);
+  * the exact accounting laws (``passes``, ``weight_bytes``,
+    ``act_bytes``, ``im2col_patch_bytes``, ``patch_hbm_bytes``,
+    ``weight_bytes_vs_base``, ``group_size``, ``static_a_planes``) of
+    EVERY config — these are integer laws, so any drift is a bug;
+  * config coverage — a config present in the baseline must exist in the
+    fresh run (a silently dropped bench section reads as "no regression").
+
+Exit status 0 = no regression; 1 = regression(s), printed per field.
+Used by ``make bench-check`` and CI's bench-regression job::
+
+    PYTHONPATH=src python benchmarks/kernelbench.py --smoke --out fresh.json
+    PYTHONPATH=src python benchmarks/bench_compare.py \
+        --baseline BENCH_kernel.json --fresh fresh.json
+"""
+import argparse
+import json
+import sys
+
+# Modeled fields: compared within tolerance. Direction matters — executing
+# MORE planes (or a SMALLER modeled speedup) is the regression; improvements
+# beyond tolerance are reported as info, never failed.
+TOLERANCED_FIELDS = {
+    # field -> direction ("higher_better" | "lower_better")
+    "modeled_speedup": "higher_better",
+    "mean_effective_planes": "lower_better",
+    "plane_fraction_executed": "lower_better",
+}
+
+# Law fields: integer/ratio accounting that must match EXACTLY.
+EXACT_FIELDS = ("passes", "weight_bytes", "act_bytes", "im2col_patch_bytes",
+                "patch_hbm_bytes", "weight_bytes_vs_base", "group_size",
+                "static_a_planes")
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float):
+    """Returns (failures, notes): lists of human-readable strings."""
+    failures, notes = [], []
+    base_cfgs = baseline.get("configs", {})
+    fresh_cfgs = fresh.get("configs", {})
+    for name in sorted(base_cfgs):
+        if name not in fresh_cfgs:
+            failures.append(f"{name}: missing from the fresh run "
+                            f"(bench section silently dropped?)")
+            continue
+        b, f = base_cfgs[name], fresh_cfgs[name]
+        for field in EXACT_FIELDS:
+            if field in b:
+                if field not in f:
+                    failures.append(f"{name}.{field}: law field missing "
+                                    f"from the fresh run")
+                elif f[field] != b[field]:
+                    failures.append(f"{name}.{field}: law drift "
+                                    f"{b[field]!r} -> {f[field]!r} "
+                                    f"(must match exactly)")
+        for field, direction in TOLERANCED_FIELDS.items():
+            if field not in b:
+                continue
+            if field not in f:
+                failures.append(f"{name}.{field}: modeled field missing "
+                                f"from the fresh run")
+                continue
+            bv, fv = float(b[field]), float(f[field])
+            rel = (fv - bv) / bv
+            regressed = rel < -tolerance if direction == "higher_better" \
+                else rel > tolerance
+            if regressed:
+                failures.append(
+                    f"{name}.{field}: {bv:.4g} -> {fv:.4g} "
+                    f"({rel:+.1%}, tolerance {tolerance:.0%}, "
+                    f"{direction})")
+            elif abs(rel) > tolerance:
+                notes.append(f"{name}.{field}: improved {bv:.4g} -> "
+                             f"{fv:.4g} ({rel:+.1%}) — consider "
+                             f"re-committing BENCH_kernel.json")
+    return failures, notes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_kernel.json",
+                    help="the committed benchmark record")
+    ap.add_argument("--fresh", required=True,
+                    help="a just-produced kernelbench output")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative tolerance on the modeled fields")
+    args = ap.parse_args()
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    failures, notes = compare(baseline, fresh, args.tolerance)
+    for n in notes:
+        print(f"[bench-compare] note: {n}")
+    if failures:
+        print(f"[bench-compare] {len(failures)} regression(s) vs "
+              f"{args.baseline}:")
+        for f in failures:
+            print(f"  FAIL {f}")
+        sys.exit(1)
+    n_checked = len(baseline.get("configs", {}))
+    print(f"[bench-compare] OK — {n_checked} configs, no regressions "
+          f"(tolerance {args.tolerance:.0%} on "
+          f"{'/'.join(TOLERANCED_FIELDS)})")
+
+
+if __name__ == "__main__":
+    main()

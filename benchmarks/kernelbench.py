@@ -17,9 +17,12 @@ And for the FUSED CONV path (the CVL law end-to-end):
   * wall-time of fused vs legacy im2col serve_packed conv on CPU.
 
 And for DYNAMIC activation trimming (Loom's runtime lever, per group-size
-in {64, 256}): static vs dynamic serve_packed parity, the mean effective
+in {64, 256}): static vs dynamic serve_packed parity — LINEARS (groups of
+rows) and CONVS (groups of output windows) — the mean effective
 activation planes the OR-tree path executes, and the modeled/measured
-speedup — recorded so the dynamic trajectory is tracked across PRs.
+speedup — recorded so the dynamic trajectory is tracked across PRs and
+gated by benchmarks/bench_compare.py (make bench-check, the CI
+bench-regression job).
 
 Every jitted callable is bound with functools.partial (a lambda closing
 over the loop variable would retrace — and silently time — the LAST
@@ -224,6 +227,60 @@ def bench_dynamic(results):
             "measured_speedup": t_static / t_dyn}
 
 
+def bench_conv_dynamic(results):
+    """Static vs dynamic fused conv: runtime per-window-group trimming.
+
+    Spatially-skewed feature maps (most of the map quiet, one quadrant
+    loud — e.g. a letterboxed or padded image): per group-size, the mean
+    effective activation planes executed per group of output windows, the
+    cycle-model speedup Pa/E[eff] a serial-activation SIP gains on the
+    CVL, and the CPU-oracle wall-times (informational — the XLA route
+    masks groups arithmetically, so CPU wall-clock does NOT reflect the
+    modeled gain)."""
+    print("== static vs dynamic fused conv: per-window-group trimming ==")
+    rng = np.random.default_rng(3)
+    b, h, c, n, kernel, stride, pa, pw = 4, 32, 8, 32, 3, 1, 8, 8
+    xr = rng.normal(size=(b, h, h, c)).astype(np.float32)
+    # Spatial skew: only the top band is loud (a letterboxed image), so
+    # whole window groups stay quiet. 32x32 = 1024 windows per image ->
+    # 4 groups at the paper's 256, 16 at 64: the finer granularity
+    # quarantines the loud band into fewer groups and trims deeper.
+    xr[:, h // 4:] *= 0.02
+    x = jnp.asarray(xr)
+    wf = jnp.asarray(rng.normal(size=(kernel * kernel * c, n)), jnp.float32)
+    w_packed, ws = _serve_packed_params(wf, pw)
+
+    static = jax.jit(functools.partial(
+        ops.loom_conv_serve, w_packed=w_packed, w_scale=ws,
+        kernel=kernel, stride=stride, a_bits=pa, backend="xla"))
+    t_static = _time(static, x)
+    xq, _ = q.quantize(x, pa)
+
+    for g in (64, 256):
+        dyn = jax.jit(functools.partial(
+            ops.loom_conv_serve_dynamic, w_packed=w_packed, w_scale=ws,
+            kernel=kernel, stride=stride, a_bits=pa, group_size=g,
+            backend="xla"))
+        np.testing.assert_array_equal(np.asarray(static(x)),
+                                      np.asarray(dyn(x)))  # bit-exact
+        t_dyn = _time(dyn, x)
+        counts = dynamic.conv_window_group_counts(xq, kernel, stride, g, pa)
+        mean_eff = float(jnp.mean(counts.astype(jnp.float32)))
+        frac = mean_eff / pa
+        modeled = pa / mean_eff              # serial-plane cycle model
+        print(f"  group={g:3d}: mean effective planes {mean_eff:.2f}/{pa} "
+              f"(fraction {frac:.3f})  modeled speedup {modeled:.2f}x   "
+              f"static {t_static:8.1f} us  dynamic-mask {t_dyn:8.1f} us")
+        results[f"dynamic_conv_g{g}"] = {
+            "us": t_dyn, "us_static": t_static,
+            "passes": pw,
+            "group_size": g, "static_a_planes": pa,
+            "mean_effective_planes": mean_eff,
+            "plane_fraction_executed": frac,
+            "modeled_speedup": modeled,
+            "measured_speedup": t_static / t_dyn}
+
+
 def validate_payload(payload, schema_path, required=False):
     """Validate the benchmark JSON against the checked-in schema.
 
@@ -257,6 +314,7 @@ def main():
     bench_matmul(results)
     bench_conv(results)
     bench_dynamic(results)
+    bench_conv_dynamic(results)
     payload = {"bench": "kernelbench", "note": BATCH_ENGINE_NOTE,
                "configs": results}
     # Write FIRST — a schema failure must not discard minutes of timings.

@@ -9,6 +9,8 @@ backend and calls one of five ops:
     matmul_planes          static bit-serial matmul over packed planes
     matmul_planes_dynamic  plane-count-gated variant (runtime trimming)
     conv_planes            fused bit-serial convolution
+    conv_planes_dynamic    conv with runtime per-window-group activation
+                           plane trimming (counts from the OR-tree)
     dynamic_quant          per-group activation quantization + OR-tree bits
     attention              full-sequence attention
 
@@ -28,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.bitserial_conv import bitserial_conv
+from repro.kernels.bitserial_conv import (bitserial_conv,
+                                          bitserial_conv_dynamic)
 from repro.kernels.bitserial_matmul import (bitserial_matmul,
                                             bitserial_matmul_dynamic)
 from repro.kernels.dynamic_quant import dynamic_quant
@@ -81,6 +84,45 @@ class Backend:
             xq, wq.reshape(kernel, kernel, c, -1), stride,
             exact_f32=ops.conv_accum_fits_f32(kkc, a_bits, w_bits))
 
+    def conv_planes_dynamic(self, xq: jax.Array, w_packed: jax.Array,
+                            counts: jax.Array, *, kernel: int, stride: int,
+                            w_bits: int, a_bits: int,
+                            group_size: int) -> jax.Array:
+        """Like conv_planes but each group of ``group_size`` output windows
+        executes only counts[b, g] serial activation planes.
+
+        Production XLA route: instead of materializing all Pa activation
+        plane tensors (the truncating oracle, ref.bitserial_conv_dynamic_ref
+        does that), every window's activations are truncated to the
+        group's effective width with ONE arithmetic GROUP-LEVEL mask —
+        keep the low ``count`` bits, reinterpret signed at that width —
+        fused into the k*k shift-and-matmul window walk, so no Pa-plane
+        stack and no im2col patch tensor exist on this path either.
+        """
+        from repro.core import bitpack
+        c = xq.shape[-1]
+        kkc = kernel * kernel * c
+        wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)
+        w2 = wq.reshape(kernel * kernel, c, -1)
+        b, h, w_, _ = xq.shape
+        pad = kernel // 2
+        ho, wo = -(-h // stride), -(-w_ // stride)
+        # Per-window effective width, [B, Ho, Wo, 1] (row-major groups).
+        cmap = jnp.repeat(counts, group_size, axis=1)[:, :ho * wo]
+        cmap = cmap.reshape(b, ho, wo, 1)
+        xp = jnp.pad(xq.astype(jnp.int32),
+                     ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        acc = jnp.zeros((b, ho, wo, w2.shape[-1]), jnp.int32)
+        slices = ref.conv_window_slices(xp, kernel, stride, ho, wo)
+        for sl, wslab in zip(slices, w2):
+            low = sl & ((1 << cmap) - 1)                # group-level mask
+            val = low - (((low >> (cmap - 1)) & 1) << cmap)
+            acc = acc + jax.lax.dot_general(
+                val, wslab,
+                dimension_numbers=(((3,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        return acc
+
     def dynamic_quant(self, x2: jax.Array, *, group_size: int,
                       bits: int) -> tuple:
         """f32 [M, K] -> (xq int8, per-group scale, per-group eff bits)."""
@@ -124,6 +166,28 @@ class PallasBackend(Backend):
         return bitserial_conv(xq.astype(jnp.int8), w_packed, kernel=kernel,
                               stride=stride, w_bits=w_bits,
                               interpret=self.interpret)
+
+    def conv_planes_dynamic(self, xq, w_packed, counts, *, kernel, stride,
+                            w_bits, a_bits, group_size):
+        # Activations are the plane-serial operand here; weights ride as
+        # dense int8 MXU passes. Pw > 8 splits into 7-bit int8-safe
+        # subplanes whose shifted partials accumulate exactly (the same
+        # decomposition as the dynamic linear path in kernels/ops.py).
+        from repro.core import bitpack, quantize as q
+        wq = bitpack.unpack_weights(w_packed, w_bits)       # [K8, N] int32
+        if w_bits <= 8:
+            w_planes, shifts = wq[None], jnp.ones((1,), jnp.int32)
+        else:
+            w_planes, shifts = q.group_planes(wq, w_bits, 7)
+        y = None
+        for i in range(w_planes.shape[0]):
+            part = bitserial_conv_dynamic(
+                xq.astype(jnp.int8), w_planes[i].astype(jnp.int8), counts,
+                kernel=kernel, stride=stride, a_bits=a_bits,
+                group_size=group_size, interpret=self.interpret)
+            part = part * shifts[i]
+            y = part if y is None else y + part
+        return y
 
     def dynamic_quant(self, x2, *, group_size, bits):
         return dynamic_quant(x2, group_size=group_size, bits=bits,

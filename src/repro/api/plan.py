@@ -55,8 +55,9 @@ class LayerPlan:
 
     ``route`` is one of the module-level route constants. ``dynamic_a``
     enables runtime per-group activation-plane trimming on the PACKED
-    route (groups of ``group_size`` concurrently-processed rows; the
-    Lascorz OR-tree path). ``kernel``/``stride`` are conv geometry;
+    route (the Lascorz OR-tree path): groups of ``group_size``
+    concurrently-processed rows for linears, groups of ``group_size``
+    output windows for convs. ``kernel``/``stride`` are conv geometry;
     ``conv_route`` picks the fused implicit-im2col lowering vs the legacy
     HBM-materializing one (A/B benchmarks only).
     """

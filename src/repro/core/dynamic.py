@@ -64,6 +64,42 @@ def serve_group_counts(xq: jax.Array, group_size: int,
     return jnp.minimum(eff.reshape(-1), max_bits).astype(jnp.int32)
 
 
+def conv_window_group_counts(xq: jax.Array, kernel: int, stride: int,
+                             group_size: int, max_bits: int) -> jax.Array:
+    """Runtime activation plane counts for the bit-serial CONV serving path.
+
+    :func:`serve_group_counts` generalized to windowed activations: the
+    concurrently-processed unit is an output window (one k*k*C patch row
+    of the implicit im2col matrix), and a group is ``group_size``
+    consecutive windows in row-major (Ho, Wo) order per image — the
+    paper's group of 256 concurrent CVL activations. The OR-tree over a
+    group covers every activation value any of its windows reads, which
+    here reduces to a max-|value| sliding window ("same" geometry,
+    pad = k//2) followed by the group max.
+
+    xq: int [B, H, W, C] quantized activations (per-tensor scale — the
+    SAME grid as the static path, so trimming is value-preserving).
+    Returns int32 [B, ceil(Ho*Wo/group_size)], each group's minimum
+    sufficient signed precision clamped to the static profile
+    ``max_bits``. Ho*Wo need not divide the group size: the ragged
+    trailing group covers only its real windows (zero padding never
+    raises the group OR), and an all-zero tile reports the 1-bit floor.
+    """
+    b, h, w, c = xq.shape
+    pad = kernel // 2
+    win = jax.lax.reduce_window(
+        jnp.abs(xq.astype(jnp.int32)), 0, jax.lax.max,
+        window_dimensions=(1, kernel, kernel, c),
+        window_strides=(1, stride, stride, c),
+        padding=((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    flat = win.reshape(b, -1)               # [B, Ho*Wo] per-window max |a|
+    padn = (-flat.shape[1]) % group_size
+    if padn:
+        flat = jnp.pad(flat, ((0, 0), (0, padn)))
+    eff = q.effective_bits(flat.reshape(b, -1, group_size), axis=-1)
+    return jnp.minimum(eff, max_bits).astype(jnp.int32)
+
+
 def dynamic_stats(xq: jax.Array, static_bits: int, group_size: int) -> dict:
     """Report the savings dynamic precision reduction achieves vs the static
     profile — the quantity that drives Loom's runtime speedup contribution."""

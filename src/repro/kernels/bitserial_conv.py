@@ -28,6 +28,16 @@ Hp*Wp*C, the packed planes Pw*ceil(kkC/8)*bn, the patch matrix
 Ho*Wo*kkC8, and the int32 accumulator Ho*Wo*bn*4. CIFAR-scale maps
 (<=64x64, C<=256) fit comfortably in 16 MB; larger maps want an
 output-row-tiled variant (ROADMAP open item).
+
+`bitserial_conv_dynamic` is the DYNAMIC-PRECISION transpose of the same
+design (Lascorz et al., the paper's runtime trimming): the serial axis
+becomes the ACTIVATION planes, weights ride as one dense int8 operand,
+and a scalar-prefetch count per group of `group_size` output windows
+gates the plane grid axis — `pl.when(p < count)` skips the whole grid
+step (patch assembly, plane extraction, MXU pass) for planes above the
+group's OR-tree effective width, with the (count-1)-th plane negated
+(2's-complement truncation at the effective width, value-preserving, so
+the result is bit-identical to the static kernel).
 """
 from __future__ import annotations
 
@@ -47,15 +57,11 @@ def _unpack_planes(packed: jax.Array) -> jax.Array:
     return bits.reshape(pw, k8 * 8, bn).astype(jnp.int8)
 
 
-def _kernel(x_ref, wp_ref, out_ref, *, kernel: int, stride: int, w_bits: int,
-            ho: int, wo: int, kpad: int):
-    """Grid = (B, N/bn). One image, one output-channel tile per step."""
-    xv = x_ref[0]                                   # [Hp, Wp, C] int8
+def _patches(xv: jax.Array, kernel: int, stride: int, ho: int,
+             wo: int) -> jax.Array:
+    """Implicit im2col of one VMEM-resident padded map: static window-offset
+    strided slices, feature order (di, dj, c) — the pack_weights row order."""
     c = xv.shape[-1]
-
-    # Implicit im2col: static window-offset strided slices in VMEM. Patch
-    # feature order is (di, dj, c) — identical to models/cnn._im2col and
-    # to the pack_weights row order, so packed linear weights reuse as-is.
     cols = []
     for di in range(kernel):
         for dj in range(kernel):
@@ -64,7 +70,13 @@ def _kernel(x_ref, wp_ref, out_ref, *, kernel: int, stride: int, w_bits: int,
                 (di, dj, 0),
                 (di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
                 (stride, stride, 1)))               # [Ho, Wo, C]
-    patches = jnp.concatenate(cols, axis=-1).reshape(ho * wo, kernel * kernel * c)
+    return jnp.concatenate(cols, axis=-1).reshape(ho * wo, kernel * kernel * c)
+
+
+def _kernel(x_ref, wp_ref, out_ref, *, kernel: int, stride: int, w_bits: int,
+            ho: int, wo: int, kpad: int):
+    """Grid = (B, N/bn). One image, one output-channel tile per step."""
+    patches = _patches(x_ref[0], kernel, stride, ho, wo)
     if kpad:                                        # match packed K rows
         patches = jnp.pad(patches, ((0, 0), (0, kpad)))
 
@@ -121,3 +133,103 @@ def bitserial_conv(x: jax.Array, w_packed: jax.Array, *, kernel: int,
         out_shape=jax.ShapeDtypeStruct((b, ho, wo, n), jnp.int32),
         interpret=interpret,
     )(xp, w_packed)
+
+
+def _kernel_dyn(counts_ref, x_ref, w_ref, out_ref, rows_ref, acc_ref, *,
+                kernel: int, stride: int, a_bits: int, ho: int, wo: int,
+                gsz: int, kpad: int, rpad: int):
+    """Grid = (B, G, Pa): the serial ACTIVATION-plane axis innermost.
+
+    The dynamic-precision transpose of the static kernel: weights ride as
+    one dense int8 operand and the activations are decomposed plane-
+    serially, so the runtime per-window-group effective precision
+    (counts_ref, scalar prefetch — the per-group metadata of Lascorz et
+    al.) gates the plane axis: plane grid steps with p >= count are
+    skipped entirely via pl.when, and the (count-1)-th plane is negated
+    (2's complement at the effective width). The group's patch rows are
+    assembled ONCE, at plane 0 (which always executes — counts have a
+    1-bit floor), into a VMEM scratch the remaining plane steps reuse."""
+    b = pl.program_id(0)
+    g = pl.program_id(1)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        patches = _patches(x_ref[0], kernel, stride, ho, wo)
+        patches = jnp.pad(patches, ((0, rpad), (0, kpad)))
+        rows_ref[...] = jax.lax.dynamic_slice(
+            patches, (g * gsz, 0), (gsz, patches.shape[1]))
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    count = counts_ref[b, g]
+
+    @pl.when(p < count)
+    def _work():
+        bit = ((rows_ref[...].astype(jnp.int32) >> p) & 1).astype(jnp.int8)
+        part = jax.lax.dot_general(
+            bit, w_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)       # {0,1} x int8 MXU pass
+        sign = jnp.where(p == count - 1, -1, 1)     # MSB at effective width
+        acc_ref[...] += part * (sign * (jnp.int32(1) << p))
+
+    @pl.when(p == a_bits - 1)
+    def _done():
+        out_ref[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "a_bits",
+                                             "group_size", "interpret"))
+def bitserial_conv_dynamic(x: jax.Array, wq: jax.Array, counts: jax.Array, *,
+                           kernel: int, stride: int = 1, a_bits: int,
+                           group_size: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """Fused "same"-padded conv with runtime activation-plane trimming.
+
+    x: int8 [B, H, W, C]; wq: int8 [K8, N] — the UNPACKED weights (or one
+    int8-safe subplane of a Pw>8 weight, summed by the caller), zero-padded
+    to the packed layout's K8 = ceil(k*k*C/8)*8 rows; counts: int32
+    [B, ceil(Ho*Wo/group_size)] per-window-group effective activation
+    precisions (core.dynamic.conv_window_group_counts). Group g of image b
+    executes only counts[b, g] of the ``a_bits`` serial activation planes.
+    Returns int32 [B, Ho, Wo, N], bit-identical to the static conv
+    whenever every group's values fit in its count (2's-complement
+    truncation at the effective width is value-preserving).
+    """
+    assert kernel % 2 == 1, f"odd kernels only, got {kernel}"
+    b, h, w, c = x.shape
+    k8, n = wq.shape
+    kkc = kernel * kernel * c
+    assert k8 == -(-kkc // 8) * 8, (wq.shape, kkc)
+    assert 1 <= a_bits <= 8, a_bits
+
+    pad = kernel // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    hp, wp_ = h + 2 * pad, w + 2 * pad
+    ho = -(-h // stride)
+    wo = -(-w // stride)
+    nwin = ho * wo
+    gsz = group_size
+    ng = -(-nwin // gsz)
+    assert counts.shape == (b, ng), (counts.shape, b, ng)
+
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, ng, a_bits),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp_, c), lambda i, j, p, counts: (i, 0, 0, 0)),
+            pl.BlockSpec((k8, n), lambda i, j, p, counts: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gsz, n), lambda i, j, p, counts: (i, j, 0)),
+        scratch_shapes=[pltpu.VMEM((gsz, k8), jnp.int8),    # group patch rows
+                        pltpu.VMEM((gsz, n), jnp.int32)],   # accumulator
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_dyn, kernel=kernel, stride=stride,
+                          a_bits=a_bits, ho=ho, wo=wo, gsz=gsz,
+                          kpad=k8 - kkc, rpad=ng * gsz - nwin),
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((b, ng * gsz, n), jnp.int32),
+        interpret=interpret,
+    )(counts, xp, wq)
+    return out[:, :nwin].reshape(b, ho, wo, n)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.api.backend import resolve_backend
 from repro.core import bitpack, dynamic, quantize as q
+from repro.kernels import ref
 
 
 def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
@@ -143,18 +144,13 @@ def int_conv_same(x_int: jax.Array, w4: jax.Array, stride: int,
     dt = jnp.float32 if exact_f32 else jnp.int32
     xp = jnp.pad(x_int.astype(dt),
                  ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-    wc = w4.astype(dt)
+    wc = w4.astype(dt).reshape(k * k, c, n)
     acc = jnp.zeros((b, ho, wo, n), dt)
-    for di in range(k):
-        for dj in range(k):
-            sl = jax.lax.slice(
-                xp, (0, di, dj, 0),
-                (b, di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
-                (1, stride, stride, 1))
-            acc = acc + jax.lax.dot_general(
-                sl, wc[di, dj],
-                dimension_numbers=(((3,), (0,)), ((), ())),
-                preferred_element_type=dt)
+    for sl, wslab in zip(ref.conv_window_slices(xp, k, stride, ho, wo), wc):
+        acc = acc + jax.lax.dot_general(
+            sl, wslab,
+            dimension_numbers=(((3,), (0,)), ((), ())),
+            preferred_element_type=dt)
     return acc.astype(jnp.int32)
 
 
@@ -180,6 +176,39 @@ def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
     xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
     y = be.conv_planes(xq, w_packed, kernel=kernel, stride=stride,
                        w_bits=w_bits, a_bits=a_bits)
+    return (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
+
+
+def loom_conv_serve_dynamic(x: jax.Array, w_packed: jax.Array,
+                            w_scale: jax.Array, *, kernel: int, stride: int,
+                            a_bits: int, group_size: int = 256, backend=None,
+                            use_pallas: bool | None = None,
+                            interpret: bool | None = None) -> jax.Array:
+    """Dynamic-precision serving conv: runtime activation-plane trimming.
+
+    The CVL analogue of :func:`loom_linear_serve_dynamic`: activations are
+    quantized on the SAME per-tensor grid as the static path, then the
+    OR-tree (``core.dynamic.conv_window_group_counts``) finds the minimum
+    sufficient precision of each group of ``group_size`` output windows —
+    the paper's "much smaller than a layer" granularity — and only that
+    many serial ACTIVATION planes execute per group
+    (``backend.conv_planes_dynamic``). 2's-complement truncation at the
+    effective width is value-preserving, so the result is bit-identical
+    to :func:`loom_conv_serve`. Tiny output maps clamp the group to one
+    8-window-aligned group rather than padding 256x.
+    """
+    be = resolve_backend(backend, use_pallas, interpret)
+    w_bits = w_packed.shape[0]
+    a_bits = min(a_bits, 8)  # int8 kernel ABI, as in loom_conv_serve
+    xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)  # static grid
+    h, w_ = x.shape[1], x.shape[2]
+    nwin = -(-h // stride) * -(-w_ // stride)
+    gsz = min(group_size, _round_up(nwin, 8))
+    counts = dynamic.conv_window_group_counts(xq, kernel, stride, gsz,
+                                              a_bits)
+    y = be.conv_planes_dynamic(xq, w_packed, counts, kernel=kernel,
+                               stride=stride, w_bits=w_bits, a_bits=a_bits,
+                               group_size=gsz)
     return (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
 
 

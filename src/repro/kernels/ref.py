@@ -33,6 +33,28 @@ def bitserial_matmul_dynamic_ref(x: jax.Array, w_packed: jax.Array,
     return jnp.matmul(x.astype(jnp.int32), w_eff, preferred_element_type=jnp.int32)
 
 
+def conv_window_slices(xp: jax.Array, kernel: int, stride: int, ho: int,
+                       wo: int) -> list:
+    """The k*k window-offset strided slices of a PADDED NHWC map.
+
+    Emitted in the canonical (di, dj) order whose concatenation along the
+    channel axis yields patch features in (di, dj, c) order — the
+    pack_weights row order shared with models/cnn._im2col and the Pallas
+    kernels' implicit im2col. This is the ONE batched window walk every
+    non-Pallas conv route builds on. Returns k*k arrays [B, Ho, Wo, C].
+    """
+    b, _, _, c = xp.shape
+    out = []
+    for di in range(kernel):
+        for dj in range(kernel):
+            out.append(jax.lax.slice(
+                xp, (0, di, dj, 0),
+                (b, di + (ho - 1) * stride + 1,
+                 dj + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1)))
+    return out
+
+
 def bitserial_conv_ref(x: jax.Array, w_packed: jax.Array, *, kernel: int,
                        stride: int = 1, w_bits: int) -> jax.Array:
     """Oracle + XLA serving path for the fused bit-serial conv.
@@ -54,6 +76,40 @@ def bitserial_conv_ref(x: jax.Array, w_packed: jax.Array, *, kernel: int,
         padding=((pad, pad), (pad, pad)),
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         preferred_element_type=jnp.int32)
+
+
+def bitserial_conv_dynamic_ref(x: jax.Array, w_packed: jax.Array,
+                               counts: jax.Array, *, kernel: int,
+                               stride: int = 1, w_bits: int,
+                               group_size: int = 256) -> jax.Array:
+    """Truncating oracle for the dynamic-precision conv kernel.
+
+    Materializes ALL activation bit planes of the (explicit, oracle-only)
+    im2col patch matrix, keeps each window group's first counts[b, g]
+    planes with the (count-1)-th plane negated (2's complement at the
+    effective width), and matmuls the reconstruction against the unpacked
+    weights. This is the mathematical spec of what the Pallas kernel's
+    plane skipping and the XLA group-mask route must compute — for
+    sufficient counts it equals :func:`bitserial_conv_ref` bit for bit.
+    """
+    c = x.shape[-1]
+    kkc = kernel * kernel * c
+    wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)   # int32 [kkC, N]
+    b, h, w_, _ = x.shape
+    pad = kernel // 2
+    xp = jnp.pad(x.astype(jnp.int32),
+                 ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho, wo = -(-h // stride), -(-w_ // stride)
+    flat = jnp.concatenate(conv_window_slices(xp, kernel, stride, ho, wo),
+                           axis=-1).reshape(b, ho * wo, kkc)
+    cmap = jnp.repeat(counts, group_size, axis=1)[:, :ho * wo, None]
+    p_idx = jnp.arange(8, dtype=jnp.int32).reshape(8, 1, 1, 1)
+    bits = (flat[None] >> p_idx) & 1                       # all Pa planes
+    sign = jnp.where(p_idx == cmap[None] - 1, -1, 1)
+    active = (p_idx < cmap[None]).astype(jnp.int32)
+    eff = jnp.sum(bits * active * sign * (1 << p_idx), axis=0)
+    y = jnp.matmul(eff, wq, preferred_element_type=jnp.int32)
+    return y.reshape(b, ho, wo, -1)
 
 
 def dynamic_quant_ref(x: jax.Array, group_size: int, bits: int = 8):

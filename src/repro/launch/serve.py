@@ -14,7 +14,11 @@ prefill/decode pair behind a ``ServingSession``. This module keeps:
 
 Modes: dense (DPNN-equivalent baseline), serve_int8 (LM_8b), serve_packed
 (bit-serial planes; Pw/16 weight bytes; ``--dynamic-a`` adds runtime
-per-group activation-plane trimming on the linears).
+per-group activation-plane trimming — per group-of-rows on linears, per
+group-of-output-windows on convs). ``--arch paper-cnn`` serves the CNN
+classification cell, so the fused dynamic conv path runs end-to-end.
+``--out-tokens FILE`` saves the generations/predictions as .npy — the CI
+serve-smoke job diffs the session run against the shim run with it.
 """
 from __future__ import annotations
 
@@ -103,6 +107,41 @@ def _generate_session(cfg, args, policy):
     return sess.generate(tokens, args.gen_len)
 
 
+def _cnn_inputs(cfg, args):
+    import numpy as np
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(args.batch, cfg.img, cfg.img,
+                                        cfg.in_ch)), jnp.float32)
+
+
+def _classify_shim(cfg, args, policy):
+    """The CNN cell on the deprecated ExecConfig wiring."""
+    import numpy as np
+    from repro.models import cnn, layers as L, model as M
+
+    params, specs = cnn.init_params(jax.random.PRNGKey(0), cfg)
+    if args.mode != "dense":
+        params, specs = M.convert_params_for_serving(params, specs, policy,
+                                                     args.mode)
+    exec_cfg = L.ExecConfig(mode=args.mode, policy=policy,
+                            use_pallas=args.backend != "xla",
+                            interpret=args.backend != "pallas_tpu")
+    logits = jax.jit(lambda p, x: cnn.forward(p, cfg, x, exec_cfg))(
+        params, _cnn_inputs(cfg, args))
+    return np.argmax(np.asarray(logits), axis=-1)
+
+
+def _classify_session(cfg, args, policy):
+    """The same CNN cell through loom.compile()."""
+    import numpy as np
+    from repro.api import session as loom
+
+    sess = loom.compile(cfg, policy, mode=args.mode, backend=args.backend,
+                        rng=0)
+    logits = sess.classify(_cnn_inputs(cfg, args))
+    return np.argmax(np.asarray(logits), axis=-1)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -122,8 +161,12 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--a-bits", type=int, default=8)
     ap.add_argument("--w-bits", type=int, default=8)
+    ap.add_argument("--out-tokens", default=None, metavar="FILE",
+                    help="save the generations/predictions as .npy "
+                         "(CI diffs session vs shim runs)")
     args = ap.parse_args(argv)
 
+    import numpy as np
     from repro.core.policy import uniform_policy
 
     cfg = configs.get(args.arch, smoke=True)
@@ -132,11 +175,21 @@ def main(argv=None):
     if args.dynamic_a:
         import dataclasses as dc
         policy = dc.replace(policy, group_size=args.group_size)
-    gen_fn = _generate_session if args.api == "session" else _generate_shim
-    gen = gen_fn(cfg, args, policy)
-    print(f"[serve] generated {gen.shape} tokens via {args.api} "
-          f"({args.backend}{', dynamic-a' if args.dynamic_a else ''}); "
-          f"first row: {gen[0][:8]}...")
+    if hasattr(cfg, "convs"):            # CNN classification cell
+        cls_fn = _classify_session if args.api == "session" else _classify_shim
+        gen = cls_fn(cfg, args, policy)
+        print(f"[serve] classified {gen.shape[0]} images via {args.api} "
+              f"({args.backend}{', dynamic-a' if args.dynamic_a else ''}); "
+              f"predictions: {gen}")
+    else:
+        gen_fn = _generate_session if args.api == "session" else _generate_shim
+        gen = gen_fn(cfg, args, policy)
+        print(f"[serve] generated {gen.shape} tokens via {args.api} "
+              f"({args.backend}{', dynamic-a' if args.dynamic_a else ''}); "
+              f"first row: {gen[0][:8]}...")
+    if args.out_tokens:
+        np.save(args.out_tokens, gen)
+        print(f"[serve] saved outputs to {args.out_tokens}")
     print("done")
 
 

@@ -20,9 +20,10 @@ Routes (see repro.api.plan):
     packed       paper-faithful bit-serial path: weights stored bit-packed
                  [Pw, K/8, N] in the param tree; bytes = Pw/16 of bf16;
                  Pw plane passes on the plan's backend. With
-                 ``policy.dynamic_a`` the linear route trims ACTIVATION
-                 planes per group of concurrently-processed rows at
-                 runtime (Lascorz OR-tree; bit-identical to static).
+                 ``policy.dynamic_a`` BOTH routes trim ACTIVATION planes
+                 at runtime (Lascorz OR-tree; bit-identical to static):
+                 linears per group of concurrently-processed rows, convs
+                 per group of output windows.
 
 Serving routes require ``convert_params_for_serving`` to be run once over
 the trained param tree (it replaces each linear's "w" with the quantized /
@@ -214,8 +215,13 @@ def _conv_int8(p, x, kernel, stride, lp, be):
 
 
 def _conv_packed(p, x, kernel, stride, lp, be):
-    # Dynamic per-group activation planes for the conv kernel are still a
-    # ROADMAP item; the packed conv always runs the static plane count.
+    # Paper-faithful bit-serial conv over pre-packed planes. ``dynamic_a``
+    # trims serial ACTIVATION planes per group of ``lp.group_size`` output
+    # windows at runtime (bit-identical to the static plane count).
+    if lp.dynamic_a:
+        return ops.loom_conv_serve_dynamic(
+            x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
+            a_bits=lp.a_bits, group_size=lp.group_size, backend=be)
     return ops.loom_conv_serve(
         x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
         a_bits=lp.a_bits, backend=be)

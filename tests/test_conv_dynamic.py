@@ -1,0 +1,252 @@
+"""Dynamic per-group activation-plane trimming in the fused conv path.
+
+The specification: ``loom_conv_serve_dynamic`` must be BIT-IDENTICAL to
+the static ``loom_conv_serve`` across the full acceptance grid —
+(Pa, Pw) in {(8,8), (4,4), (8,11)}, kernel {1,3,5} x stride {1,2},
+ragged trailing window groups included, on both the xla (group-level
+masking, no Pa-plane stack) and pallas_interpret (plane-skipping kernel)
+backends — because 2's-complement truncation at the OR-tree effective
+width is value-preserving. The truncating oracle
+(``ref.bitserial_conv_dynamic_ref``) pins the semantics for ARBITRARY
+counts, including insufficient ones, so the plane-skip logic itself is
+validated, not just the identity case.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.api as loom
+from repro.api.backend import get_backend
+from repro.core import bitpack, dynamic, quantize as q
+from repro.core.policy import uniform_policy
+from repro.kernels import ops, ref
+from repro.models import cnn, layers as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _skewed_map(rng, b, h, c, scale=1.0):
+    """Feature maps whose spatial regions have very different magnitudes —
+    the regime where whole window groups stay quiet and planes trim."""
+    x = rng.normal(size=(b, h, h, c)).astype(np.float32) * scale
+    x[:, h // 2:] *= 0.02
+    x[:, :2, :2] *= 0.001
+    return jnp.asarray(x)
+
+
+def _packed(rng, kkc, n, pw):
+    wq, ws = q.quantize(jnp.asarray(rng.normal(size=(kkc, n)), jnp.float32),
+                        pw)
+    return bitpack.pack_weights(wq, pw), ws
+
+
+# ---------------------------------------------------------------------------
+# Acceptance grid: dynamic == static, bit for bit, on both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", [1, 3, 5])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("pa,pw", [(8, 8), (4, 4), (8, 11)])
+def test_dynamic_conv_bit_identical_to_static(kernel, stride, pa, pw):
+    rng = np.random.default_rng(kernel * 100 + stride * 10 + pw)
+    b, h, c, n = 2, 9, 5, 16
+    x = _skewed_map(rng, b, h, c)
+    wp, ws = _packed(rng, kernel * kernel * c, n, pw)
+    y_static = ops.loom_conv_serve(x, wp, ws, kernel=kernel, stride=stride,
+                                   a_bits=pa, backend="xla")
+    # group_size=16 forces multiple groups AND a ragged trailing group
+    # (nwin = 81 or 25, neither divides 16).
+    for backend in ("xla", "pallas_interpret"):
+        y_dyn = ops.loom_conv_serve_dynamic(
+            x, wp, ws, kernel=kernel, stride=stride, a_bits=pa,
+            group_size=16, backend=backend)
+        np.testing.assert_array_equal(np.asarray(y_static), np.asarray(y_dyn))
+
+
+def test_dynamic_conv_paper_group_size_clamps_small_maps():
+    """group_size=256 on a 9x9 map (81 windows) clamps to one 8-aligned
+    group instead of padding 3x — still bit-exact on both backends."""
+    rng = np.random.default_rng(42)
+    x = _skewed_map(rng, 2, 9, 4)
+    wp, ws = _packed(rng, 3 * 3 * 4, 8, 8)
+    y_static = ops.loom_conv_serve(x, wp, ws, kernel=3, stride=1, a_bits=8)
+    for backend in ("xla", "pallas_interpret"):
+        y_dyn = ops.loom_conv_serve_dynamic(x, wp, ws, kernel=3, stride=1,
+                                            a_bits=8, group_size=256,
+                                            backend=backend)
+        np.testing.assert_array_equal(np.asarray(y_static), np.asarray(y_dyn))
+
+
+def test_dynamic_conv_wide_activation_profile_clamps():
+    """Table-1 Pa=13-16 profiles clamp to the int8 kernel ABI on the
+    dynamic path exactly as on the static one."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)) * 50, jnp.float32)
+    wp, ws = _packed(rng, 3 * 3 * 4, 8, 8)
+    y_static = ops.loom_conv_serve(x, wp, ws, kernel=3, stride=1, a_bits=16)
+    for backend in ("xla", "pallas_interpret"):
+        y_dyn = ops.loom_conv_serve_dynamic(x, wp, ws, kernel=3, stride=1,
+                                            a_bits=16, group_size=32,
+                                            backend=backend)
+        np.testing.assert_array_equal(np.asarray(y_static), np.asarray(y_dyn))
+
+
+# ---------------------------------------------------------------------------
+# Window-group OR-tree counts
+# ---------------------------------------------------------------------------
+
+def test_conv_window_group_counts_trims_and_floors():
+    rng = np.random.default_rng(7)
+    x = _skewed_map(rng, 2, 8, 4)
+    xq, _ = q.quantize(x, 8)
+    counts = dynamic.conv_window_group_counts(xq, 3, 1, 16, 8)
+    assert counts.shape == (2, 4)               # 64 windows / 16
+    assert int(counts.max()) == 8               # the loud region
+    assert int(counts.min()) < 8                # the quiet region trims
+    assert int(counts.min()) >= 1
+
+
+def test_conv_window_group_counts_all_zero_tile_one_bit_floor():
+    """An all-zero activation tile must report the 1-bit floor (mirrors
+    the group_effective_bits ragged fix for linears)."""
+    xq = jnp.zeros((2, 8, 8, 4), jnp.int32)
+    counts = dynamic.conv_window_group_counts(xq, 3, 1, 16, 8)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.ones((2, 4), np.int32))
+    # and the dynamic conv on the zero tile stays bit-exact vs static
+    rng = np.random.default_rng(8)
+    wp, ws = _packed(rng, 3 * 3 * 4, 8, 8)
+    x = jnp.zeros((2, 8, 8, 4), jnp.float32)
+    y_static = ops.loom_conv_serve(x, wp, ws, kernel=3, stride=1, a_bits=8)
+    for backend in ("xla", "pallas_interpret"):
+        y_dyn = ops.loom_conv_serve_dynamic(x, wp, ws, kernel=3, stride=1,
+                                            a_bits=8, group_size=16,
+                                            backend=backend)
+        np.testing.assert_array_equal(np.asarray(y_static), np.asarray(y_dyn))
+
+
+def test_conv_window_group_counts_ragged_tail_group():
+    """Ho*Wo % group_size != 0: the ragged trailing group reports only its
+    REAL windows' precision (zero padding never raises the OR)."""
+    x = np.zeros((1, 5, 5, 2), np.float32)      # 25 windows, group 16 -> 2
+    x[0, 4, 4, 0] = 1.0                         # only the LAST window loud
+    xq, _ = q.quantize(jnp.asarray(x), 8)
+    counts = dynamic.conv_window_group_counts(xq, 1, 1, 16, 8)
+    assert counts.shape == (1, 2)
+    assert int(counts[0, 0]) == 1               # quiet full group: floor
+    assert int(counts[0, 1]) == 8               # ragged tail sees the spike
+
+
+# ---------------------------------------------------------------------------
+# Truncation semantics: oracle == XLA group mask == Pallas plane skip,
+# for counts that actually truncate (not the value-preserving identity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel,stride", [(3, 1), (5, 2)])
+def test_forced_low_counts_match_truncating_oracle(kernel, stride):
+    rng = np.random.default_rng(11)
+    b, h, c, n, pa, pw = 2, 6, 4, 8, 8, 8
+    xq = jnp.asarray(rng.integers(q.qmin(pa), q.qmax(pa) + 1,
+                                  size=(b, h, h, c)), jnp.int32)
+    wq = jnp.asarray(rng.integers(q.qmin(pw), q.qmax(pw) + 1,
+                                  size=(kernel * kernel * c, n)), jnp.int32)
+    wp = bitpack.pack_weights(wq, pw)
+    nwin = (-(-h // stride)) ** 2
+    gsz = 8
+    ng = -(-nwin // gsz)
+    counts = jnp.asarray(rng.integers(1, 6, size=(b, ng)), jnp.int32)
+    y_ref = ref.bitserial_conv_dynamic_ref(xq, wp, counts, kernel=kernel,
+                                           stride=stride, w_bits=pw,
+                                           group_size=gsz)
+    for name in ("xla", "pallas_interpret"):
+        y_be = get_backend(name).conv_planes_dynamic(
+            xq, wp, counts, kernel=kernel, stride=stride, w_bits=pw,
+            a_bits=pa, group_size=gsz)
+        np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_be))
+    # the low counts really truncate: result differs from the static conv
+    y_static = ref.bitserial_conv_ref(xq, wp, kernel=kernel, stride=stride,
+                                      w_bits=pw)
+    assert not np.array_equal(np.asarray(y_ref), np.asarray(y_static))
+
+
+def test_sufficient_counts_make_oracle_equal_static():
+    """With the OR-tree's own counts the truncating oracle IS the static
+    conv — truncation at the effective width is value-preserving."""
+    rng = np.random.default_rng(13)
+    x = _skewed_map(rng, 2, 7, 3)
+    xq, _ = q.quantize(x, 8)
+    wq = jnp.asarray(rng.integers(q.qmin(8), q.qmax(8) + 1,
+                                  size=(3 * 3 * 3, 8)), jnp.int32)
+    wp = bitpack.pack_weights(wq, 8)
+    counts = dynamic.conv_window_group_counts(xq, 3, 1, 16, 8)
+    y_ref = ref.bitserial_conv_dynamic_ref(xq, wp, counts, kernel=3,
+                                           stride=1, w_bits=8, group_size=16)
+    y_static = ref.bitserial_conv_ref(xq, wp, kernel=3, stride=1, w_bits=8)
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_static))
+
+
+# ---------------------------------------------------------------------------
+# Plan routing and model-level wiring
+# ---------------------------------------------------------------------------
+
+def test_conv_packed_routes_via_plan_dynamic_a(monkeypatch):
+    """``_conv_packed`` must dispatch on plan.dynamic_a — dynamic plans hit
+    loom_conv_serve_dynamic, static plans never do."""
+    calls = []
+    real = ops.loom_conv_serve_dynamic
+    monkeypatch.setattr(L.ops, "loom_conv_serve_dynamic",
+                        lambda *a, **k: calls.append(k) or real(*a, **k))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 3)), jnp.float32)
+    p, spec = L.linear_init(jax.random.PRNGKey(0), 3 * 3 * 3, 8,
+                            dtype=jnp.float32)
+    pol = uniform_policy(8, 8, dynamic_a=True)
+    packed, _ = L.convert_linear_for_serving(p, spec, pol.lookup("conv1"),
+                                             "serve_packed")
+    plan_dyn = loom.build_plan(None, pol, "serve_packed")
+    L.conv_apply(packed, x, 3, 1, plan_dyn, "conv1")
+    assert len(calls) == 1 and calls[0]["group_size"] == 256
+    plan_static = loom.build_plan(None, uniform_policy(8, 8), "serve_packed")
+    L.conv_apply(packed, x, 3, 1, plan_static, "conv1")
+    assert len(calls) == 1                       # static plan: not called
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_cnn_forward_dynamic_equals_static(backend):
+    """Model-level: the full CNN (convs + FC head, ragged groups in both)
+    under dynamic_a equals the static serve_packed forward bit for bit."""
+    cfg = cnn.CNNConfig()
+    params, specs = cnn.init_params(jax.random.PRNGKey(0), cfg)
+    pol_s = uniform_policy(8, 8)
+    pol_d = uniform_policy(8, 8, dynamic_a=True)
+    params = {k: (L.convert_linear_for_serving(v, specs[k],
+                                               pol_s.lookup(k),
+                                               "serve_packed")[0]
+                  if L.is_linear(v) else v)
+              for k, v in params.items()}
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 32, 32, 3)),
+                    jnp.float32)
+    y_s = cnn.forward(params, cfg, x,
+                      loom.build_plan(cfg, pol_s, "serve_packed", backend))
+    y_d = cnn.forward(params, cfg, x,
+                      loom.build_plan(cfg, pol_d, "serve_packed", backend))
+    np.testing.assert_array_equal(np.asarray(y_s), np.asarray(y_d))
+
+
+def test_serve_cli_cnn_dynamic(capsys, tmp_path):
+    """The demo driver's CNN cell end-to-end with dynamic trimming: the
+    session and shim wirings classify identically."""
+    from repro.launch import serve as serve_mod
+    out_a = tmp_path / "a.npy"
+    out_b = tmp_path / "b.npy"
+    serve_mod.main(["--arch", "paper-cnn", "--mode", "serve_packed",
+                    "--api", "session", "--dynamic-a", "--batch", "2",
+                    "--out-tokens", str(out_a)])
+    serve_mod.main(["--arch", "paper-cnn", "--mode", "serve_packed",
+                    "--api", "shim", "--dynamic-a", "--batch", "2",
+                    "--out-tokens", str(out_b)])
+    out = capsys.readouterr().out
+    assert "classified" in out and "done" in out
+    np.testing.assert_array_equal(np.load(out_a), np.load(out_b))
