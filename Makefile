@@ -15,7 +15,8 @@ LINT_PATHS = src/repro/api \
              benchmarks/kernelbench.py \
              benchmarks/bench_compare.py \
              tests/test_api.py \
-             tests/test_conv_dynamic.py
+             tests/test_conv_dynamic.py \
+             tests/test_conv_tiled.py
 
 .PHONY: test bench bench-smoke bench-check lint
 

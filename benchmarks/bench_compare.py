@@ -11,8 +11,10 @@ MODELED quantities the paper's claims rest on:
     drift means a real change in counts, quantization, or grouping);
   * the exact accounting laws (``passes``, ``weight_bytes``,
     ``act_bytes``, ``im2col_patch_bytes``, ``patch_hbm_bytes``,
-    ``weight_bytes_vs_base``, ``group_size``, ``static_a_planes``) of
-    EVERY config — these are integer laws, so any drift is a bug;
+    ``weight_bytes_vs_base``, ``group_size``, ``static_a_planes``, and
+    the ``conv_tiled_*`` VMEM-footprint / band-geometry / band-local
+    dynamic-prologue fields) of EVERY config — these are integer laws,
+    so any drift is a bug;
   * config coverage — a config present in the baseline must exist in the
     fresh run (a silently dropped bench section reads as "no regression").
 
@@ -40,7 +42,13 @@ TOLERANCED_FIELDS = {
 # Law fields: integer/ratio accounting that must match EXACTLY.
 EXACT_FIELDS = ("passes", "weight_bytes", "act_bytes", "im2col_patch_bytes",
                 "patch_hbm_bytes", "weight_bytes_vs_base", "group_size",
-                "static_a_planes")
+                "static_a_planes",
+                # conv_tiled_*: the row-banded grid's VMEM-footprint and
+                # band-local dynamic-prologue accounting laws.
+                "rows_per_band", "n_bands", "conv_tile",
+                "vmem_bytes_banded", "vmem_bytes_untiled",
+                "vmem_budget_bytes", "fits_untiled", "dyn_group_size",
+                "dyn_patch_rows_per_group", "dyn_patch_rows_full_image")
 
 
 def compare(baseline: dict, fresh: dict, tolerance: float):

@@ -24,6 +24,14 @@ speedup — recorded so the dynamic trajectory is tracked across PRs and
 gated by benchmarks/bench_compare.py (make bench-check, the CI
 bench-regression job).
 
+And for the ROW-BANDED conv grid (bench_conv_tiled): untiled vs banded
+wall-clock at 32/64/128-px maps, the per-grid-step VMEM-footprint
+accounting law (conv_vmem_bytes — the 128-px config does NOT fit the
+Pallas backend budget untiled and must resolve a smaller conv_tile), and
+the dynamic kernel's band-local prologue law (patch rows assembled per
+window group ~ group_size + Wo, no longer Ho*Wo — the factor-G
+redundancy the whole-map prologue had).
+
 Every jitted callable is bound with functools.partial (a lambda closing
 over the loop variable would retrace — and silently time — the LAST
 config only). Results are written machine-readable to BENCH_kernel.json
@@ -126,7 +134,7 @@ def _conv_im2col_serve(x, w_packed, w_scale, kernel, stride, a_bits):
     patches = jnp.concatenate(cols, axis=-1)
     return ops.loom_linear_serve(
         patches, w_packed, w_scale, a_bits=a_bits,
-        w_bits=w_packed.shape[0], use_pallas=False)
+        w_bits=w_packed.shape[0], backend="xla")
 
 
 def bench_conv(results):
@@ -281,6 +289,90 @@ def bench_conv_dynamic(results):
             "measured_speedup": t_static / t_dyn}
 
 
+def bench_conv_tiled(results):
+    """Untiled vs Ho-banded fused conv (Pallas interpret) + the VMEM law.
+
+    Interpret-mode wall-clock only shows the banding OVERHEAD trend (the
+    grid re-walks the halo rows); what the banded grid actually buys is
+    the per-grid-step VMEM footprint, which is an exact accounting law
+    (conv_vmem_bytes) asserted here: the 128-px map does not fit the
+    Pallas backend's budget untiled, the heuristic's conv_tile does. The
+    same section records the dynamic kernel's band-local prologue law —
+    patch rows assembled per window group are bounded by
+    group_size + (Wo-1) + alignment, independent of Ho*Wo."""
+    from repro.api.backend import get_backend
+    from repro.api.plan import conv_rows_per_band
+    from repro.kernels.bitserial_conv import (band_geometry, bitserial_conv,
+                                              conv_vmem_bytes,
+                                              dyn_band_geometry)
+
+    print("== row-banded fused conv: VMEM-footprint law + wall-clock ==")
+    budget = get_backend("pallas_interpret").vmem_budget
+    rng = np.random.default_rng(4)
+    kernel, stride, pa = 3, 1, 8
+    for name, h, c, n, pw in (("conv_tiled_32px", 32, 8, 32, 8),
+                              ("conv_tiled_64px", 64, 8, 32, 8),
+                              ("conv_tiled_128px", 128, 64, 64, 4)):
+        x = jnp.asarray(rng.integers(-(1 << (pa - 1)), (1 << (pa - 1)),
+                                     size=(1, h, h, c)), jnp.int8)
+        kkc = kernel * kernel * c
+        wq, _ = q.quantize(jnp.asarray(rng.normal(size=(kkc, n)),
+                                       jnp.float32), pw)
+        w_packed = bitpack.pack_weights(wq, pw)
+
+        ho = wo = -(-h // stride)
+        tile = conv_rows_per_band(h, h, c, n, kernel=kernel, stride=stride,
+                                  w_bits=pw, budget=budget)
+        # Maps that fit untiled still measure a quarter-map band so the
+        # banding-overhead trend is tracked at every size.
+        rpb = tile if tile < ho else max(1, ho // 4)
+        _, nb, _ = band_geometry(ho, wo, rpb, kernel, stride)
+
+        untiled = functools.partial(bitserial_conv, w_packed=w_packed,
+                                    kernel=kernel, stride=stride, w_bits=pw)
+        banded = functools.partial(bitserial_conv, w_packed=w_packed,
+                                   kernel=kernel, stride=stride, w_bits=pw,
+                                   rows_per_band=rpb)
+        np.testing.assert_array_equal(np.asarray(untiled(x)),
+                                      np.asarray(banded(x)))  # bit-exact
+        t_untiled = _time(untiled, x)
+        t_banded = _time(banded, x)
+
+        v_untiled = conv_vmem_bytes(h, h, c, n, kernel=kernel, stride=stride,
+                                    w_bits=pw)
+        v_banded = conv_vmem_bytes(h, h, c, n, kernel=kernel, stride=stride,
+                                   w_bits=pw, rows_per_band=rpb)
+        fits_untiled = int(v_untiled <= budget)
+        # The VMEM accounting law: banding only shrinks the footprint, and
+        # whenever the untiled map busts the budget the heuristic's tile
+        # must fit (that is what unlocks large-resolution maps).
+        assert v_banded <= v_untiled
+        assert conv_vmem_bytes(h, h, c, n, kernel=kernel, stride=stride,
+                               w_bits=pw, rows_per_band=tile) <= budget \
+            or tile == 1
+        if not fits_untiled:
+            assert tile < ho, (name, tile, ho)
+
+        # Dynamic band-local prologue law: per-group patch rows assembled.
+        gsz = min(256, -(-ho * wo // 8) * 8)
+        rows_pg, _ = dyn_band_geometry(wo, gsz, kernel, stride)
+        assert gsz + wo - 1 <= rows_pg * wo < gsz + 2 * wo
+
+        print(f"  {name}: untiled {t_untiled:9.1f} us  banded[{rpb:3d}] "
+              f"{t_banded:9.1f} us   vmem {v_untiled} -> {v_banded} B "
+              f"(budget {budget}, fits untiled: {bool(fits_untiled)})   "
+              f"dyn prologue {rows_pg * wo}/{ho * wo} rows/group @ g={gsz}")
+        results[name] = {
+            "us": t_banded, "us_untiled": t_untiled,
+            "passes": pw,                          # serial weight planes
+            "rows_per_band": rpb, "n_bands": nb, "conv_tile": tile,
+            "vmem_bytes_banded": v_banded, "vmem_bytes_untiled": v_untiled,
+            "vmem_budget_bytes": budget, "fits_untiled": fits_untiled,
+            "dyn_group_size": gsz,
+            "dyn_patch_rows_per_group": rows_pg * wo,
+            "dyn_patch_rows_full_image": ho * wo}
+
+
 def validate_payload(payload, schema_path, required=False):
     """Validate the benchmark JSON against the checked-in schema.
 
@@ -313,6 +405,7 @@ def main():
     results = {}
     bench_matmul(results)
     bench_conv(results)
+    bench_conv_tiled(results)
     bench_dynamic(results)
     bench_conv_dynamic(results)
     payload = {"bench": "kernelbench", "note": BATCH_ENGINE_NOTE,

@@ -7,9 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as loom
 from repro import configs
-from repro.core import dynamic, policy, profiler, quantize as q
-from repro.models import cnn, layers as L
+from repro.core import dynamic, profiler, quantize as q
+from repro.models import cnn
 
 
 def main():
@@ -17,11 +18,12 @@ def main():
     params, _ = cnn.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(8, cfg.img, cfg.img, 3)), jnp.float32)
-    base_logits = cnn.forward(params, cfg, x, L.ExecConfig(mode="dense"))
+    base_logits = cnn.forward(params, cfg, x,
+                              loom.build_plan(cfg, mode="dense"))
 
     def eval_fn(pol):
-        lg = cnn.forward(params, cfg, x, L.ExecConfig(mode="fake_quant",
-                                                      policy=pol))
+        lg = cnn.forward(params, cfg, x,
+                         loom.build_plan(cfg, pol, mode="fake_quant"))
         # negative relative output distortion as the quality metric
         err = jnp.linalg.norm(lg - base_logits) / jnp.linalg.norm(base_logits)
         return float(-err)
@@ -38,7 +40,7 @@ def main():
           "-".join(str(prof_w[n]) for n in names))
 
     # dynamic per-group trimming stats (Lascorz et al.) on live activations
-    _, acts = cnn.forward(params, cfg, x, L.ExecConfig(mode="dense"),
+    _, acts = cnn.forward(params, cfg, x, loom.build_plan(cfg, mode="dense"),
                           collect_activations=True)
     print("  dynamic activation trimming (group=256):")
     for name in names:

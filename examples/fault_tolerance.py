@@ -14,13 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as PS
 
+import repro.api as loom
 from repro.ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
 from repro.data import DataConfig, synthetic_batch
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import TrainConfig, jit_train_step, make_train_state
-from repro.models import layers as L
 from repro.models.transformer import LayerSpec, ModelConfig
-from repro.optim import AdamWConfig, Schedule
+from repro.optim import Schedule
 from repro.runtime import Supervisor, TransientWorkerError
 
 
@@ -43,7 +43,7 @@ def run(steps, ckpt_dir, inject_failure_at=None):
     fired = {"done": False}
 
     with jax.set_mesh(mesh):
-        step_fn = jit_train_step(cfg, exec_cfg := L.ExecConfig(mode="dense"),
+        step_fn = jit_train_step(cfg, loom.build_plan(cfg, mode="dense"),
                                  tc, mesh, sspecs, bspecs)
 
         def one_step(st, idx):

@@ -11,12 +11,11 @@
 
 Run:  PYTHONPATH=src python examples/precision_profiles.py
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as loom
 from repro import configs
 from repro.core import dynamic, policy as pol, profiler, quantize as q
 from repro.models import layers as L, model as M
@@ -30,12 +29,13 @@ def main():
     params, specs = M.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32)
-    ref, _ = M.forward_train(params, cfg, toks, L.ExecConfig(mode="dense"))
+    ref, _ = M.forward_train(params, cfg, toks,
+                             loom.build_plan(cfg, mode="dense"))
     ref32 = ref.astype(jnp.float32)
 
     def eval_fn(p):
         lg, _ = M.forward_train(params, cfg, toks,
-                                L.ExecConfig(mode="fake_quant", policy=p))
+                                loom.build_plan(cfg, p, mode="fake_quant"))
         err = jnp.linalg.norm(lg.astype(jnp.float32) - ref32) \
             / jnp.linalg.norm(ref32)
         return float(-err)
@@ -62,7 +62,7 @@ def main():
     packed_bytes = sum(x.size * x.dtype.itemsize
                        for x in jax.tree.leaves(packed))
     lg_p, _ = M.forward_train(packed, cfg, toks,
-                              L.ExecConfig(mode="serve_packed", policy=mixed))
+                              loom.build_plan(cfg, mixed, mode="serve_packed"))
     corr = np.corrcoef(np.asarray(ref, np.float32).ravel(),
                        np.asarray(lg_p, np.float32).ravel())[0, 1]
     print(f"[packed] mixed-precision weights: {packed_bytes/1e6:.3f}MB vs "

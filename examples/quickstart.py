@@ -13,9 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as loom
 from repro import configs
 from repro.core import bitpack, cyclemodel as cm, policy, profiler, quantize as q
-from repro.models import cnn, layers as L, model as M
+from repro.models import cnn, model as M
 
 
 def main():
@@ -24,13 +25,13 @@ def main():
     params, specs = cnn.init_params(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(np.random.default_rng(0).normal(
         size=(8, cfg.img, cfg.img, 3)), jnp.float32)
-    ref = cnn.forward(params, cfg, x, L.ExecConfig(mode="dense"))
+    ref = cnn.forward(params, cfg, x, loom.build_plan(cfg, mode="dense"))
     print(f"[1] paper_cnn forward: logits {ref.shape}")
 
     # -- 2. per-layer precision profiling (Table 1 methodology) -----------
     def eval_fn(pol):
         lg = cnn.forward(params, cfg, x,
-                         L.ExecConfig(mode="fake_quant", policy=pol))
+                         loom.build_plan(cfg, pol, mode="fake_quant"))
         return float(-jnp.linalg.norm(lg - ref) / jnp.linalg.norm(ref))
 
     prof = profiler.profile_layer_precisions(
@@ -67,9 +68,10 @@ def main():
     sp, _ = M.convert_params_for_serving(tparams, tspecs, pol, "serve_int8")
     toks = jnp.asarray(np.random.default_rng(2).integers(
         0, tcfg.vocab, size=(2, 16)), jnp.int32)
-    lg_d, _ = M.forward_train(tparams, tcfg, toks, L.ExecConfig(mode="dense"))
+    lg_d, _ = M.forward_train(tparams, tcfg, toks,
+                              loom.build_plan(tcfg, mode="dense"))
     lg_q, _ = M.forward_train(sp, tcfg, toks,
-                              L.ExecConfig(mode="serve_int8", policy=pol))
+                              loom.build_plan(tcfg, pol, mode="serve_int8"))
     corr = np.corrcoef(np.asarray(lg_d, np.float32).ravel(),
                        np.asarray(lg_q, np.float32).ravel())[0, 1]
     print(f"[6] transformer int8 serving vs dense: logit corr {corr:.4f}")

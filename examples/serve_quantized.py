@@ -14,10 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as loom
 from repro import configs
 from repro.core.policy import uniform_policy
 from repro.launch.serve import make_serve_fns
-from repro.models import layers as L, model as M
+from repro.models import model as M
 
 
 def tree_bytes(tree) -> int:
@@ -25,11 +26,11 @@ def tree_bytes(tree) -> int:
                if hasattr(x, "dtype"))
 
 
-def generate(cfg, params, exec_cfg, tokens, n_new: int, force=None):
+def generate(cfg, params, plan, tokens, n_new: int, force=None):
     """Greedy decode; if ``force`` is given, feed ITS tokens instead of our
     argmax (teacher forcing) so different precisions see identical inputs
     and per-step logits are comparable."""
-    prefill_fn, decode_fn = make_serve_fns(cfg, exec_cfg)
+    prefill_fn, decode_fn = make_serve_fns(cfg, plan)
     prefill_fn = jax.jit(prefill_fn)
     decode_fn = jax.jit(decode_fn)
     b, s = tokens.shape
@@ -55,7 +56,8 @@ def main():
     tokens = jnp.asarray(rng.integers(1, cfg.vocab, size=(4, 16)), jnp.int32)
 
     dense_bytes = tree_bytes(params)
-    gen_dense, lg_dense = generate(cfg, params, L.ExecConfig(mode="dense"),
+    gen_dense, lg_dense = generate(cfg, params,
+                                   loom.build_plan(cfg, mode="dense"),
                                    tokens, 12)
     print(f"[dense]        weights {dense_bytes/1e6:7.3f}MB  "
           f"tokens[0]={gen_dense[0][:8]}")
@@ -65,7 +67,8 @@ def main():
 
     p8, _ = M.convert_params_for_serving(params, specs, pol, "serve_int8")
     b8 = tree_bytes(p8)
-    gen8, lg8 = generate(cfg, p8, L.ExecConfig(mode="serve_int8", policy=pol),
+    gen8, lg8 = generate(cfg, p8,
+                         loom.build_plan(cfg, pol, mode="serve_int8"),
                          tokens, 12, force=gen_dense)
     c8 = corr(lg8, lg_dense)
     print(f"[serve_int8]   weights {b8/1e6:7.3f}MB ({b8/dense_bytes:.2f}x)  "
@@ -74,7 +77,7 @@ def main():
     pp, _ = M.convert_params_for_serving(params, specs, pol, "serve_packed")
     bp = tree_bytes(pp)
     genp, lgp = generate(cfg, pp,
-                         L.ExecConfig(mode="serve_packed", policy=pol),
+                         loom.build_plan(cfg, pol, mode="serve_packed"),
                          tokens, 12, force=gen_dense)
     cp = corr(lgp, lg_dense)
     print(f"[serve_packed] weights {bp/1e6:7.3f}MB ({bp/dense_bytes:.2f}x; "

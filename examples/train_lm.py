@@ -14,12 +14,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+import repro.api as loom
 from repro.ckpt import CheckpointManager
 from repro.core.policy import uniform_policy
 from repro.data import DataConfig, synthetic_batch
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import TrainConfig, jit_train_step, make_train_state
-from repro.models import layers as L, model as M
+from repro.models import model as M
 from repro.models.transformer import LayerSpec, ModelConfig
 from repro.optim import AdamWConfig, Schedule
 from repro.runtime import Supervisor
@@ -55,9 +56,9 @@ def main():
     print(f"[train_lm] {cfg.name}: {n_params / 1e6:.1f}M params")
 
     mode = "fake_quant" if args.qat_bits else "dense"
-    exec_cfg = L.ExecConfig(
-        mode=mode, policy=uniform_policy(args.qat_bits or 16,
-                                         args.qat_bits or 16))
+    exec_cfg = loom.build_plan(
+        cfg, uniform_policy(args.qat_bits or 16, args.qat_bits or 16),
+        mode=mode)
     tc = TrainConfig(opt=AdamWConfig(lr=3e-4),
                      sched=Schedule(peak_lr=3e-4, warmup_steps=20,
                                     total_steps=args.steps))

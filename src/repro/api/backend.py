@@ -50,12 +50,26 @@ def _pallas_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
     return bm, bn, bk
 
 
+def _truncate_signed(v: jax.Array, counts: jax.Array) -> jax.Array:
+    """2's-complement truncation of ``v`` at per-element width ``counts``:
+    keep the low ``counts`` bits, reinterpret signed at that width. The
+    ONE group-mask idiom both dynamic XLA routes (linear column groups,
+    conv window groups) realize trimming with — value-preserving whenever
+    v fits in counts bits, the truncating-oracle semantics otherwise."""
+    low = v & ((1 << counts) - 1)
+    return low - (((low >> (counts - 1)) & 1) << counts)
+
+
 class Backend:
     """XLA oracle backend — also the base class of the Pallas backends."""
 
     name = "xla"
-    use_pallas = False      # legacy introspection (ExecConfig shim)
+    use_pallas = False      # legacy introspection (backend resolution)
     interpret = True
+    # Per-grid-step VMEM budget (bytes) the banded conv kernel's tile
+    # heuristic (repro.api.plan.conv_rows_per_band) targets. None = no
+    # VMEM constraint (XLA lowers through HBM-resident convs).
+    vmem_budget: int | None = None
 
     def matmul_planes(self, xq: jax.Array, w_packed: jax.Array, *,
                       w_bits: int) -> jax.Array:
@@ -67,14 +81,32 @@ class Backend:
                               bn: int) -> jax.Array:
         """Like matmul_planes but N-tile j executes only plane_counts[j]
         planes of the packed operand (2's complement at the effective
-        width). ``bn`` is the N-tile width one count covers."""
-        return ref.bitserial_matmul_dynamic_ref(xq, w_packed, plane_counts,
-                                                w_bits, bn)
+        width). ``bn`` is the N-tile width one count covers.
+
+        Production XLA route (the linear twin of the conv group mask):
+        instead of materializing all w_bits plane tensors and the
+        truncating per-plane sum (the oracle,
+        ref.bitserial_matmul_dynamic_ref, does that), the unpacked
+        operand is truncated per COLUMN GROUP with one arithmetic mask —
+        keep the low ``count`` bits, reinterpret signed at that width —
+        then a single int32 matmul runs. In the dynamic serving linear
+        the packed operand is the runtime-packed ACTIVATIONS of the
+        transposed matmul, so this is the CPU/GPU fallback that trims
+        without a Pa-plane stack.
+        """
+        from repro.core import bitpack
+        wq = bitpack.unpack_weights(w_packed, w_bits)   # signed int32 [K, N]
+        counts = jnp.repeat(plane_counts, bn)[None, :]  # [1, N] per-col width
+        return jnp.matmul(xq.astype(jnp.int32), _truncate_signed(wq, counts),
+                          preferred_element_type=jnp.int32)
 
     def conv_planes(self, xq: jax.Array, w_packed: jax.Array, *, kernel: int,
-                    stride: int, w_bits: int, a_bits: int) -> jax.Array:
+                    stride: int, w_bits: int, a_bits: int,
+                    conv_tile: int | None = None) -> jax.Array:
         """Fused bit-serial "same" conv: int [B,H,W,C] x packed planes ->
-        exact int32 [B, Ho, Wo, N]. No im2col patch tensor in HBM."""
+        exact int32 [B, Ho, Wo, N]. No im2col patch tensor in HBM.
+        ``conv_tile`` (rows per band) only matters to VMEM-constrained
+        backends; the XLA lowering ignores it."""
         from repro.core import bitpack
         from repro.kernels import ops
         c = xq.shape[-1]
@@ -115,10 +147,8 @@ class Backend:
         acc = jnp.zeros((b, ho, wo, w2.shape[-1]), jnp.int32)
         slices = ref.conv_window_slices(xp, kernel, stride, ho, wo)
         for sl, wslab in zip(slices, w2):
-            low = sl & ((1 << cmap) - 1)                # group-level mask
-            val = low - (((low >> (cmap - 1)) & 1) << cmap)
             acc = acc + jax.lax.dot_general(
-                val, wslab,
+                _truncate_signed(sl, cmap), wslab,
                 dimension_numbers=(((3,), (0,)), ((), ())),
                 preferred_element_type=jnp.int32)
         return acc
@@ -137,14 +167,21 @@ class Backend:
         return f"<Backend {self.name}>"
 
 
+# 16 MiB of physical VMEM per TensorCore, kept at 3/4 utilization so the
+# pipelined grid can double-buffer the band + weight blocks.
+_VMEM_BUDGET = 12 * 2 ** 20
+
+
 class PallasBackend(Backend):
     """Mosaic kernels; ``interpret=True`` runs them on CPU for validation."""
 
     use_pallas = True
 
-    def __init__(self, name: str, interpret: bool):
+    def __init__(self, name: str, interpret: bool,
+                 vmem_budget: int = _VMEM_BUDGET):
         self.name = name
         self.interpret = interpret
+        self.vmem_budget = vmem_budget
 
     def matmul_planes(self, xq, w_packed, *, w_bits):
         m, k = xq.shape
@@ -162,9 +199,11 @@ class PallasBackend(Backend):
                                         w_bits=w_bits, bm=bm, bn=bn, bk=bk,
                                         interpret=self.interpret)
 
-    def conv_planes(self, xq, w_packed, *, kernel, stride, w_bits, a_bits):
+    def conv_planes(self, xq, w_packed, *, kernel, stride, w_bits, a_bits,
+                    conv_tile=None):
         return bitserial_conv(xq.astype(jnp.int8), w_packed, kernel=kernel,
                               stride=stride, w_bits=w_bits,
+                              rows_per_band=conv_tile,
                               interpret=self.interpret)
 
     def conv_planes_dynamic(self, xq, w_packed, counts, *, kernel, stride,
@@ -224,8 +263,8 @@ def resolve_backend(backend=None, use_pallas: bool | None = None,
     """Normalize any legacy spelling to a Backend object.
 
     ``backend`` may be a Backend, a registered name, or None — in which
-    case the deprecated ``use_pallas``/``interpret`` booleans (the old
-    ExecConfig fields) pick among the built-ins.
+    case the legacy ``use_pallas``/``interpret`` booleans pick among the
+    built-ins (kept for ad-hoc tooling; plans carry a Backend object).
     """
     if isinstance(backend, Backend):
         return backend

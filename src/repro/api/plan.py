@@ -59,7 +59,12 @@ class LayerPlan:
     concurrently-processed rows for linears, groups of ``group_size``
     output windows for convs. ``kernel``/``stride`` are conv geometry;
     ``conv_route`` picks the fused implicit-im2col lowering vs the legacy
-    HBM-materializing one (A/B benchmarks only).
+    HBM-materializing one (A/B benchmarks only). ``conv_tile`` is the
+    resolved output-rows-per-band of the banded conv kernel — filled in
+    by :meth:`ExecutionPlan.conv_tile` from the layer's activation
+    geometry (recorded in ``conv_tile_geom``; re-resolved if the
+    geometry ever changes) and the backend's VMEM budget, never a
+    hot-path kwarg.
     """
 
     name: str
@@ -71,6 +76,8 @@ class LayerPlan:
     kernel: int | None = None
     stride: int | None = None
     conv_route: str = "fused"      # "fused" | "im2col"
+    conv_tile: int | None = None   # rows per band; None = not yet resolved
+    conv_tile_geom: tuple | None = None   # (h, w, c, n, w_bits) it fits
 
     @property
     def a_bits(self) -> int:
@@ -90,9 +97,9 @@ class ExecutionPlan:
     in examples) resolve lazily on first use and are memoized, so policy
     string matching happens at most once per layer, never per call.
 
-    ``mode`` and ``policy`` are kept as attributes for compatibility with
-    code that introspected the old ``ExecConfig`` (e.g. the MoE expert
-    path); new code should only touch ``layer()`` and ``backend``.
+    ``mode`` and ``policy`` stay readable attributes (the serving
+    conversion walk keys off ``mode``); apply-time code should only touch
+    ``layer()``, ``conv_tile()`` and ``backend``.
     """
 
     mode: str
@@ -122,6 +129,29 @@ class ExecutionPlan:
                     f"{(kernel, stride)}")
         return lp
 
+    def conv_tile(self, lp: LayerPlan, h: int, w: int, c: int, n: int,
+                  w_bits: int) -> int:
+        """Rows-per-band of the banded conv kernel for layer ``lp``.
+
+        Resolved from the layer's activation geometry and the backend's
+        VMEM budget (:func:`conv_rows_per_band`), then frozen into the
+        stored LayerPlan keyed to that geometry — apply-time calls with
+        the same shapes (the steady state: a layer's geometry is fixed
+        per model) just read it back. A DIFFERENT geometry re-runs the
+        budget check: a tile sized for a small map is numerically fine on
+        a big one (banding never changes results) but could bust the
+        VMEM budget, which is the one guarantee this resolver owns.
+        """
+        geom = (h, w, c, n, w_bits)
+        if lp.conv_tile is not None and lp.conv_tile_geom == geom:
+            return lp.conv_tile
+        rpb = conv_rows_per_band(h, w, c, n, kernel=lp.kernel,
+                                 stride=lp.stride, w_bits=w_bits,
+                                 budget=self.backend.vmem_budget)
+        self.layers[(lp.name, lp.kind)] = dataclasses.replace(
+            lp, conv_tile=rpb, conv_tile_geom=geom)
+        return rpb
+
     def _resolve(self, name, kind, kernel=None, stride=None) -> LayerPlan:
         try:
             route = MODE_ROUTES[self.mode]
@@ -135,17 +165,30 @@ class ExecutionPlan:
             group_size=self.policy.group_size,
             kernel=kernel, stride=stride, conv_route=self.conv_route)
 
-    @property
-    def use_pallas(self) -> bool:  # legacy ExecConfig introspection
-        return self.backend.use_pallas
 
-    @property
-    def interpret(self) -> bool:   # legacy ExecConfig introspection
-        return self.backend.interpret
+def conv_rows_per_band(h: int, w: int, c: int, n: int, *, kernel: int,
+                       stride: int, w_bits: int,
+                       budget: int | None) -> int:
+    """VMEM-budget heuristic for the banded conv kernel's band size.
 
-    @property
-    def conv_mode(self) -> str:    # legacy ExecConfig introspection
-        return self.conv_route
+    Starts from one band covering the whole map and halves the band until
+    the modeled per-grid-step footprint
+    (:func:`repro.kernels.bitserial_conv.conv_vmem_bytes`) fits
+    ``budget``. ``budget=None`` (backends with no VMEM, e.g. XLA) keeps
+    the single band. Deterministic and monotone in the budget; floors at
+    one output row per band (best effort when even that exceeds the
+    budget — e.g. an enormous width).
+    """
+    from repro.kernels.bitserial_conv import conv_vmem_bytes
+    ho = -(-h // stride)
+    rpb = ho
+    if budget is None:
+        return rpb
+    while rpb > 1 and conv_vmem_bytes(h, w, c, n, kernel=kernel,
+                                      stride=stride, w_bits=w_bits,
+                                      rows_per_band=rpb) > budget:
+        rpb = -(-rpb // 2)
+    return rpb
 
 
 def build_plan(cfg, policy: PrecisionPolicy | None = None,
@@ -177,10 +220,12 @@ def build_plan(cfg, policy: PrecisionPolicy | None = None,
 
 
 def as_plan(obj) -> ExecutionPlan:
-    """Coerce an ExecutionPlan or a deprecated ``ExecConfig`` to a plan."""
+    """Validate that ``obj`` is an :class:`ExecutionPlan`.
+
+    The deprecated string-mode shim this used to coerce was retired;
+    build plans with :func:`build_plan` (or ``loom.compile`` for serving).
+    """
     if isinstance(obj, ExecutionPlan):
         return obj
-    to_plan = getattr(obj, "as_plan", None)
-    if to_plan is None:
-        raise TypeError(f"expected ExecutionPlan or ExecConfig, got {obj!r}")
-    return to_plan()
+    raise TypeError(f"expected ExecutionPlan, got {obj!r} — the legacy "
+                    f"config shim was removed; use repro.api.build_plan")

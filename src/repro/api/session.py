@@ -110,8 +110,8 @@ class ServingSession:
 
 def _jit_lm(cfg, plan, mesh, param_specs, cache_specs):
     """Jit the prefill/decode pair, with resolved shardings when a mesh is
-    given. ``plan`` may be an ExecutionPlan or the deprecated ExecConfig
-    shim (launch/serve.jit_serve_steps delegates here)."""
+    given. ``plan`` is an ExecutionPlan
+    (launch/serve.jit_serve_steps delegates here)."""
     from repro.models import model as M
 
     def prefill_fn(params, tokens, cache, img_embeds=None):

@@ -1,11 +1,13 @@
 """Pallas TPU kernels (validated on CPU via interpret=True) + XLA refs.
 
     bitserial_matmul   the SIP array: packed-plane serial matmul (+dynamic)
-    bitserial_conv     FUSED bit-serial convolution: implicit im2col via
-                       window-offset slices in VMEM (no HBM patch tensor),
-                       all Pw packed planes staged per grid step and the
-                       serial plane loop unrolled in the kernel body —
-                       the paper's CVL execution path end-to-end
+    bitserial_conv     FUSED bit-serial convolution on an Ho-banded grid:
+                       implicit im2col via window-offset slices of the
+                       band in VMEM (no HBM patch tensor), all Pw packed
+                       planes staged per grid step and the serial plane
+                       loop unrolled in the kernel body — the paper's CVL
+                       execution path end-to-end; band size from the
+                       plan's VMEM-budget heuristic
     dynamic_quant      per-group quantize + leading-one precision detect
     flash_attention    chunked online-softmax attention (32k prefill)
     ops                jit'd dispatch wrappers (Pallas on TPU, XLA oracle

@@ -1,43 +1,63 @@
-"""Pallas TPU kernel: fused bit-serial convolution (implicit im2col).
+"""Pallas TPU kernels: fused bit-serial convolution on an Ho-banded grid.
 
 This is the CVL execution path of the paper done properly on the TPU
 memory hierarchy. The old lowering (models/cnn.py `_im2col` + matmul)
 materialized [B, Ho, Wo, k*k*C] patch tensors in HBM — a k*k-fold
 activation-bandwidth blowup that inverted the paper's bandwidth law.
-Here the patch tensor never exists outside VMEM:
+Here the patch tensor never exists outside VMEM, and the grid is tiled
+over OUTPUT ROWS (Tartan's tile-serial dataflow) so VMEM never has to
+hold a whole feature map:
 
-  * Activations stream as whole NHWC feature maps, one image per grid
-    step: HBM bytes = B * Hp * Wp * C (int8), i.e. the raw map — the
-    paper's Pa/16-law numerator, not k*k times it.
+  * The grid is (B, n_bands, N/bn): each step covers ``rows_per_band``
+    output rows of one image. Activations stream as overlapping input
+    row bands ``[(r0*stride - pad) .. ((r0+rows_per_band-1)*stride +
+    k - 1 - pad)]`` — materialized once by a row gather (the halo) so
+    each BlockSpec block IS the band; the ragged tail band reads
+    zero-padded rows whose outputs are discarded.
   * Weights stay bit-packed in HBM: uint8 [Pw, ceil(k*k*C/8), N]
     (repro.core.bitpack layout, zero-padded K rows when k*k*C % 8 != 0).
     HBM weight traffic is Pw/16 of the bf16 baseline.
   * Implicit im2col: the kernel walks the k*k window offsets with static
-    strided slices of the VMEM-resident map — the SIP array's sliding-
-    window wiring — and assembles the [Ho*Wo, k*k*C] patch matrix
-    directly in registers/VMEM.
+    strided slices of the VMEM-resident row band — the SIP array's
+    sliding-window wiring — and assembles the band-local
+    [rows_per_band*Wo, k*k*C] patch matrix directly in registers/VMEM.
   * The serial plane loop is UNROLLED IN THE KERNEL BODY: all Pw packed
-    plane tiles are staged per grid step (one BlockSpec block covers the
-    full plane axis), unpacked once, and each plane issues one int8 MXU
-    pass whose partial product is shift/negate-folded into the int32
-    accumulator (2's-complement MSB negation — the paper's negation
-    block). No outer grid dimension re-walks the image per plane.
+    plane tiles are staged per grid step, unpacked once, and each plane
+    issues one int8 MXU pass whose partial product is shift/negate-folded
+    into the int32 accumulator (2's-complement MSB negation — the
+    paper's negation block).
 
-VMEM budget per grid step (int8 unless noted): the padded map
-Hp*Wp*C, the packed planes Pw*ceil(kkC/8)*bn, the patch matrix
-Ho*Wo*kkC8, and the int32 accumulator Ho*Wo*bn*4. CIFAR-scale maps
-(<=64x64, C<=256) fit comfortably in 16 MB; larger maps want an
-output-row-tiled variant (ROADMAP open item).
+VMEM accounting (see :func:`conv_vmem_bytes`, the single source of
+truth shared with the ``repro.api.plan`` tile heuristic and the
+``bench_conv_tiled`` benchmark law). Per grid step, int8 unless noted:
+
+    band input      ((rows_per_band-1)*stride + k) * Wp * C
+    packed planes   Pw * ceil(kkC/8) * bn            (uint8)
+    unpacked planes Pw * ceil(kkC/8)*8 * bn          ({0,1} int8)
+    patch matrix    rows_per_band * Wo * ceil(kkC/8)*8
+    accumulator     rows_per_band * Wo * bn * 4      (int32)
+
+With ``rows_per_band = Ho`` (one band) this degenerates to the previous
+whole-map kernel; shrinking the band divides the two dominant terms
+(patch matrix + accumulator) by n_bands, which is what admits
+large-resolution maps into a 16 MB VMEM. Band size is resolved once per
+layer by ``repro.api.plan`` from the backend's VMEM budget — it is not
+a hot-path kwarg.
 
 `bitserial_conv_dynamic` is the DYNAMIC-PRECISION transpose of the same
 design (Lascorz et al., the paper's runtime trimming): the serial axis
 becomes the ACTIVATION planes, weights ride as one dense int8 operand,
 and a scalar-prefetch count per group of `group_size` output windows
 gates the plane grid axis — `pl.when(p < count)` skips the whole grid
-step (patch assembly, plane extraction, MXU pass) for planes above the
-group's OR-tree effective width, with the (count-1)-th plane negated
-(2's-complement truncation at the effective width, value-preserving, so
-the result is bit-identical to the static kernel).
+step for planes above the group's OR-tree effective width, with the
+(count-1)-th plane negated (2's-complement truncation at the effective
+width, value-preserving, so the result is bit-identical to the static
+kernel). Its bands are the WINDOW GROUPS themselves: a group's windows
+are contiguous in row-major order, so grid step (b, g, 0) loads only
+group g's input row band and assembles exactly the patch rows the group
+consumes (plus at most Wo-1 alignment rows when the group starts
+mid-row) — per-group prologue work no longer scales with Ho*Wo, which
+removes the factor-G patch redundancy the whole-map prologue had.
 """
 from __future__ import annotations
 
@@ -45,6 +65,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -59,8 +80,9 @@ def _unpack_planes(packed: jax.Array) -> jax.Array:
 
 def _patches(xv: jax.Array, kernel: int, stride: int, ho: int,
              wo: int) -> jax.Array:
-    """Implicit im2col of one VMEM-resident padded map: static window-offset
-    strided slices, feature order (di, dj, c) — the pack_weights row order."""
+    """Implicit im2col of one VMEM-resident padded row band: static window-
+    offset strided slices, feature order (di, dj, c) — the pack_weights
+    row order."""
     c = xv.shape[-1]
     cols = []
     for di in range(kernel):
@@ -73,10 +95,70 @@ def _patches(xv: jax.Array, kernel: int, stride: int, ho: int,
     return jnp.concatenate(cols, axis=-1).reshape(ho * wo, kernel * kernel * c)
 
 
+def band_geometry(ho: int, wo: int, rows_per_band: int | None, kernel: int,
+                  stride: int) -> tuple[int, int, int]:
+    """(rows_per_band, n_bands, band_input_rows) of the static banded grid.
+
+    ``rows_per_band=None`` means one band covering the whole map (the
+    untiled degenerate case); values are clamped to [1, Ho]."""
+    rpb = ho if rows_per_band is None else max(1, min(rows_per_band, ho))
+    return rpb, -(-ho // rpb), (rpb - 1) * stride + kernel
+
+
+def dyn_band_geometry(wo: int, group_size: int, kernel: int,
+                      stride: int) -> tuple[int, int]:
+    """(output_rows_per_group, band_input_rows) of the dynamic kernel's
+    group-aligned bands. A group of ``group_size`` row-major windows spans
+    at most ceil((group_size + wo - 2)/wo) + 1 ... precisely
+    (group_size + wo - 2)//wo + 1 output rows (the +Wo-1 slack covers a
+    group starting mid-row)."""
+    rows_pg = (group_size + wo - 2) // wo + 1
+    return rows_pg, (rows_pg - 1) * stride + kernel
+
+
+def conv_vmem_bytes(h: int, w: int, c: int, n: int, *, kernel: int,
+                    stride: int = 1, w_bits: int, bn: int = 128,
+                    rows_per_band: int | None = None) -> int:
+    """Modeled per-grid-step VMEM footprint (bytes) of the banded static
+    kernel — the accounting law the plan heuristic and the
+    ``bench_conv_tiled`` benchmark both evaluate. See the module
+    docstring for the five terms."""
+    pad = kernel // 2
+    wp_ = w + 2 * pad
+    ho = -(-h // stride)
+    wo = -(-w // stride)
+    rpb, _, band_rows = band_geometry(ho, wo, rows_per_band, kernel, stride)
+    kkc = kernel * kernel * c
+    k8 = -(-kkc // 8) * 8
+    bn = min(bn, n)
+    return (band_rows * wp_ * c            # int8 input row band
+            + w_bits * (k8 // 8) * bn      # packed planes (uint8)
+            + w_bits * k8 * bn             # unpacked {0,1} planes (int8)
+            + rpb * wo * k8                # band-local patch matrix (int8)
+            + rpb * wo * bn * 4)           # int32 accumulator
+
+
+def _banded(xp: jax.Array, starts: np.ndarray, band_rows: int) -> jax.Array:
+    """[B, Hp, Wp, C] -> [B, n_bands, band_rows, Wp, C] overlapping bands.
+
+    One gather materializes the halo (rows shared by adjacent bands) so a
+    plain BlockSpec stages exactly one band per grid step. Rows past the
+    padded map (ragged tail bands) are zero — their outputs are sliced
+    off by the caller."""
+    b, hp, wp_, c = xp.shape
+    need = int(starts[-1]) + band_rows
+    if need > hp:
+        xp = jnp.pad(xp, ((0, 0), (0, need - hp), (0, 0), (0, 0)))
+    if len(starts) == 1:    # single band (fits-in-VMEM case): no gather
+        return xp[:, None, :band_rows]
+    idx = starts[:, None] + np.arange(band_rows)[None, :]
+    return xp[:, idx]
+
+
 def _kernel(x_ref, wp_ref, out_ref, *, kernel: int, stride: int, w_bits: int,
-            ho: int, wo: int, kpad: int):
-    """Grid = (B, N/bn). One image, one output-channel tile per step."""
-    patches = _patches(x_ref[0], kernel, stride, ho, wo)
+            rows: int, wo: int, kpad: int):
+    """Grid = (B, n_bands, N/bn). One row band, one channel tile per step."""
+    patches = _patches(x_ref[0, 0], kernel, stride, rows, wo)
     if kpad:                                        # match packed K rows
         patches = jnp.pad(patches, ((0, 0), (0, kpad)))
 
@@ -91,20 +173,25 @@ def _kernel(x_ref, wp_ref, out_ref, *, kernel: int, stride: int, w_bits: int,
             preferred_element_type=jnp.int32)       # int8 x {0,1} MXU pass
         sign = -1 if p == w_bits - 1 else 1         # MSB negation block
         acc += part * (sign * (1 << p))
-    out_ref[0] = acc.reshape(ho, wo, planes.shape[-1])
+    out_ref[0, 0] = acc.reshape(rows, wo, planes.shape[-1])
 
 
 @functools.partial(jax.jit, static_argnames=("kernel", "stride", "w_bits",
-                                             "bn", "interpret"))
+                                             "bn", "rows_per_band",
+                                             "interpret"))
 def bitserial_conv(x: jax.Array, w_packed: jax.Array, *, kernel: int,
-                   stride: int = 1, w_bits: int,
-                   bn: int = 128, interpret: bool = True) -> jax.Array:
+                   stride: int = 1, w_bits: int, bn: int = 128,
+                   rows_per_band: int | None = None,
+                   interpret: bool = True) -> jax.Array:
     """Fused bit-serial "same"-padded conv over packed weight planes.
 
     x: int8 [B, H, W, C]; w_packed: uint8 [Pw, ceil(k*k*C/8), N].
     Returns int32 [B, ceil(H/stride), ceil(W/stride), N], integer-exact
     vs im2col + reference_int_matmul. Odd kernel sizes only ("same"
-    geometry, pad = k//2). interpret=True validates on CPU.
+    geometry, pad = k//2). ``rows_per_band`` tiles the grid over output
+    rows (None = one band = the whole map); banding never changes the
+    result — it only bounds the per-step VMEM footprint
+    (:func:`conv_vmem_bytes`). interpret=True validates on CPU.
     """
     assert kernel % 2 == 1, f"odd kernels only, got {kernel}"
     b, h, w, c = x.shape
@@ -116,28 +203,33 @@ def bitserial_conv(x: jax.Array, w_packed: jax.Array, *, kernel: int,
 
     pad = kernel // 2
     xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-    hp, wp_ = h + 2 * pad, w + 2 * pad
+    wp_ = w + 2 * pad
     ho = -(-h // stride)
     wo = -(-w // stride)
+    rpb, nb, band_rows = band_geometry(ho, wo, rows_per_band, kernel, stride)
+    xb = _banded(xp, np.arange(nb) * rpb * stride, band_rows)
 
-    grid = (b, n // bn)
-    return pl.pallas_call(
+    grid = (b, nb, n // bn)
+    out = pl.pallas_call(
         functools.partial(_kernel, kernel=kernel, stride=stride,
-                          w_bits=w_bits, ho=ho, wo=wo, kpad=k8 * 8 - kkc),
+                          w_bits=w_bits, rows=rpb, wo=wo, kpad=k8 * 8 - kkc),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, hp, wp_, c), lambda i, j: (i, 0, 0, 0)),
-            pl.BlockSpec((pw, k8, bn), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((1, 1, band_rows, wp_, c),
+                         lambda i, j, l: (i, j, 0, 0, 0)),
+            pl.BlockSpec((pw, k8, bn), lambda i, j, l: (0, 0, l)),
         ],
-        out_specs=pl.BlockSpec((1, ho, wo, bn), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, ho, wo, n), jnp.int32),
+        out_specs=pl.BlockSpec((1, 1, rpb, wo, bn),
+                               lambda i, j, l: (i, j, 0, 0, l)),
+        out_shape=jax.ShapeDtypeStruct((b, nb, rpb, wo, n), jnp.int32),
         interpret=interpret,
-    )(xp, w_packed)
+    )(xb, w_packed)
+    return out.reshape(b, nb * rpb, wo, n)[:, :ho]
 
 
 def _kernel_dyn(counts_ref, x_ref, w_ref, out_ref, rows_ref, acc_ref, *,
-                kernel: int, stride: int, a_bits: int, ho: int, wo: int,
-                gsz: int, kpad: int, rpad: int):
+                kernel: int, stride: int, a_bits: int, rows: int, wo: int,
+                gsz: int, kpad: int):
     """Grid = (B, G, Pa): the serial ACTIVATION-plane axis innermost.
 
     The dynamic-precision transpose of the static kernel: weights ride as
@@ -148,17 +240,23 @@ def _kernel_dyn(counts_ref, x_ref, w_ref, out_ref, rows_ref, acc_ref, *,
     skipped entirely via pl.when, and the (count-1)-th plane is negated
     (2's complement at the effective width). The group's patch rows are
     assembled ONCE, at plane 0 (which always executes — counts have a
-    1-bit floor), into a VMEM scratch the remaining plane steps reuse."""
+    1-bit floor), from the group's OWN input row band: the band covers
+    the ``rows`` output rows group g's windows span, so the prologue
+    builds rows*Wo >= gsz patch rows and slices the group's gsz at its
+    in-band column offset — band-local work, independent of Ho*Wo."""
     b = pl.program_id(0)
     g = pl.program_id(1)
     p = pl.program_id(2)
 
     @pl.when(p == 0)
     def _init():
-        patches = _patches(x_ref[0], kernel, stride, ho, wo)
-        patches = jnp.pad(patches, ((0, rpad), (0, kpad)))
+        patches = _patches(x_ref[0, 0], kernel, stride, rows, wo)
+        if kpad:
+            patches = jnp.pad(patches, ((0, 0), (0, kpad)))
+        w0 = g * gsz                        # first window of the group
+        off = w0 - (w0 // wo) * wo          # its column offset in the band
         rows_ref[...] = jax.lax.dynamic_slice(
-            patches, (g * gsz, 0), (gsz, patches.shape[1]))
+            patches, (off, 0), (gsz, patches.shape[1]))
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     count = counts_ref[b, g]
@@ -192,9 +290,12 @@ def bitserial_conv_dynamic(x: jax.Array, wq: jax.Array, counts: jax.Array, *,
     [B, ceil(Ho*Wo/group_size)] per-window-group effective activation
     precisions (core.dynamic.conv_window_group_counts). Group g of image b
     executes only counts[b, g] of the ``a_bits`` serial activation planes.
-    Returns int32 [B, Ho, Wo, N], bit-identical to the static conv
-    whenever every group's values fit in its count (2's-complement
-    truncation at the effective width is value-preserving).
+    Window groups are band-aligned: grid step (b, g, p) stages only the
+    input row band group g's windows read, so patch assembly is band-local
+    (per-group work ~ group_size + Wo, NOT Ho*Wo). Returns int32
+    [B, Ho, Wo, N], bit-identical to the static conv whenever every
+    group's values fit in its count (2's-complement truncation at the
+    effective width is value-preserving).
     """
     assert kernel % 2 == 1, f"odd kernels only, got {kernel}"
     b, h, w, c = x.shape
@@ -205,7 +306,7 @@ def bitserial_conv_dynamic(x: jax.Array, wq: jax.Array, counts: jax.Array, *,
 
     pad = kernel // 2
     xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-    hp, wp_ = h + 2 * pad, w + 2 * pad
+    wp_ = w + 2 * pad
     ho = -(-h // stride)
     wo = -(-w // stride)
     nwin = ho * wo
@@ -213,11 +314,16 @@ def bitserial_conv_dynamic(x: jax.Array, wq: jax.Array, counts: jax.Array, *,
     ng = -(-nwin // gsz)
     assert counts.shape == (b, ng), (counts.shape, b, ng)
 
+    rows_pg, band_rows = dyn_band_geometry(wo, gsz, kernel, stride)
+    starts = (np.arange(ng) * gsz // wo) * stride   # group g's first out row
+    xb = _banded(xp, starts, band_rows)
+
     gs = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, ng, a_bits),
         in_specs=[
-            pl.BlockSpec((1, hp, wp_, c), lambda i, j, p, counts: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1, band_rows, wp_, c),
+                         lambda i, j, p, counts: (i, j, 0, 0, 0)),
             pl.BlockSpec((k8, n), lambda i, j, p, counts: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, gsz, n), lambda i, j, p, counts: (i, j, 0)),
@@ -226,10 +332,10 @@ def bitserial_conv_dynamic(x: jax.Array, wq: jax.Array, counts: jax.Array, *,
     )
     out = pl.pallas_call(
         functools.partial(_kernel_dyn, kernel=kernel, stride=stride,
-                          a_bits=a_bits, ho=ho, wo=wo, gsz=gsz,
-                          kpad=k8 - kkc, rpad=ng * gsz - nwin),
+                          a_bits=a_bits, rows=rows_pg, wo=wo, gsz=gsz,
+                          kpad=k8 - kkc),
         grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((b, ng * gsz, n), jnp.int32),
         interpret=interpret,
-    )(counts, xp, wq)
+    )(counts, xb, wq)
     return out[:, :nwin].reshape(b, ho, wo, n)

@@ -7,8 +7,8 @@ packed layout, plane-count detection, and the final dequantizing cast —
 and delegate the integer core to a ``repro.api.backend.Backend``.
 
 All entry points accept ``backend=`` (a Backend object or registered
-name). The deprecated ``use_pallas``/``interpret`` boolean pair is still
-honored when ``backend`` is None, resolving to one of the built-ins.
+name; None resolves to the XLA built-in). The deprecated boolean kernel
+flags were retired with the seed-era string-mode shim.
 """
 from __future__ import annotations
 
@@ -21,15 +21,13 @@ from repro.kernels import ref
 
 
 def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
-                      *, a_bits: int, w_bits: int, backend=None,
-                      use_pallas: bool | None = None,
-                      interpret: bool | None = None) -> jax.Array:
+                      *, a_bits: int, w_bits: int, backend=None) -> jax.Array:
     """Serving-path linear: activations dynamically quantized to a_bits,
     weights pre-packed bit-serially. Output in x.dtype.
 
     x: [..., K]; w_packed: uint8 [Pw, K//8, N]; w_scale: per-tensor f32.
     """
-    be = resolve_backend(backend, use_pallas, interpret)
+    be = resolve_backend(backend)
     lead = x.shape[:-1]
     k = x.shape[-1]
     # Already-flat inputs skip the reshape round-trip entirely (XLA does
@@ -54,8 +52,7 @@ def _round_up(v: int, m: int) -> int:
 def loom_linear_serve_dynamic(x: jax.Array, w_packed: jax.Array,
                               w_scale: jax.Array, *, a_bits: int,
                               w_bits: int, group_size: int = 256,
-                              backend=None, use_pallas: bool | None = None,
-                              interpret: bool | None = None) -> jax.Array:
+                              backend=None) -> jax.Array:
     """Dynamic-precision serving linear: runtime activation-plane trimming.
 
     Loom's Lascorz-style path: activations are quantized on the SAME
@@ -77,7 +74,7 @@ def loom_linear_serve_dynamic(x: jax.Array, w_packed: jax.Array,
     Weights ride int8 MXU passes; Pw > 8 splits them into int8-safe
     subplanes whose shifted partials accumulate exactly.
     """
-    be = resolve_backend(backend, use_pallas, interpret)
+    be = resolve_backend(backend)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x if x.ndim == 2 else x.reshape(-1, k)
@@ -156,18 +153,17 @@ def int_conv_same(x_int: jax.Array, w4: jax.Array, stride: int,
 
 def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
                     *, kernel: int, stride: int, a_bits: int, backend=None,
-                    use_pallas: bool | None = None,
-                    interpret: bool | None = None) -> jax.Array:
+                    conv_tile: int | None = None) -> jax.Array:
     """Serving-path fused conv: the CVL execution path.
 
     x: [B, H, W, C] float; w_packed: uint8 [Pw, ceil(k*k*C/8), N] in the
     (di, dj, c)-row order of pack_weights(im2col weights). Activations are
     dynamically quantized to a_bits; the conv runs integer-exact over the
-    packed planes (Pallas fused kernel on TPU/interpret, one XLA integer
+    packed planes (banded Pallas kernel on the pallas backends, one XLA integer
     conv otherwise — neither materializes an im2col patch tensor in HBM).
     Output in x.dtype.
     """
-    be = resolve_backend(backend, use_pallas, interpret)
+    be = resolve_backend(backend)
     w_bits = w_packed.shape[0]
     # int8 is the kernel ABI (one MXU pass per weight plane); higher
     # profile precisions clamp to 8 like serve_int8 — without this the
@@ -175,15 +171,14 @@ def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
     a_bits = min(a_bits, 8)
     xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
     y = be.conv_planes(xq, w_packed, kernel=kernel, stride=stride,
-                       w_bits=w_bits, a_bits=a_bits)
+                       w_bits=w_bits, a_bits=a_bits, conv_tile=conv_tile)
     return (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
 
 
 def loom_conv_serve_dynamic(x: jax.Array, w_packed: jax.Array,
                             w_scale: jax.Array, *, kernel: int, stride: int,
-                            a_bits: int, group_size: int = 256, backend=None,
-                            use_pallas: bool | None = None,
-                            interpret: bool | None = None) -> jax.Array:
+                            a_bits: int, group_size: int = 256,
+                            backend=None) -> jax.Array:
     """Dynamic-precision serving conv: runtime activation-plane trimming.
 
     The CVL analogue of :func:`loom_linear_serve_dynamic`: activations are
@@ -197,7 +192,7 @@ def loom_conv_serve_dynamic(x: jax.Array, w_packed: jax.Array,
     to :func:`loom_conv_serve`. Tiny output maps clamp the group to one
     8-window-aligned group rather than padding 256x.
     """
-    be = resolve_backend(backend, use_pallas, interpret)
+    be = resolve_backend(backend)
     w_bits = w_packed.shape[0]
     a_bits = min(a_bits, 8)  # int8 kernel ABI, as in loom_conv_serve
     xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)  # static grid
@@ -212,11 +207,10 @@ def loom_conv_serve_dynamic(x: jax.Array, w_packed: jax.Array,
     return (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
 
 
-def quantize_activations(x: jax.Array, *, group_size: int = 256, bits: int = 8,
-                         backend=None, use_pallas: bool | None = None,
-                         interpret: bool | None = None):
+def quantize_activations(x: jax.Array, *, group_size: int = 256,
+                         bits: int = 8, backend=None):
     """Dynamic per-group activation quantization (Loom's runtime path)."""
-    be = resolve_backend(backend, use_pallas, interpret)
+    be = resolve_backend(backend)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     xq, scale, eff = be.dynamic_quant(x2, group_size=group_size, bits=bits)
@@ -225,9 +219,8 @@ def quantize_activations(x: jax.Array, *, group_size: int = 256, bits: int = 8,
 
 
 def attention(q_: jax.Array, k_: jax.Array, v_: jax.Array, *,
-              causal: bool = True, window: int | None = None, backend=None,
-              use_pallas: bool | None = None,
-              interpret: bool | None = None) -> jax.Array:
+              causal: bool = True, window: int | None = None,
+              backend=None) -> jax.Array:
     """Full-sequence attention ([B,H,S,D], KV already head-repeated)."""
-    be = resolve_backend(backend, use_pallas, interpret)
+    be = resolve_backend(backend)
     return be.attention(q_, k_, v_, causal=causal, window=window)

@@ -78,6 +78,39 @@ def bitserial_conv_ref(x: jax.Array, w_packed: jax.Array, *, kernel: int,
         preferred_element_type=jnp.int32)
 
 
+def bitserial_conv_banded_ref(x: jax.Array, w_packed: jax.Array, *,
+                              kernel: int, stride: int = 1, w_bits: int,
+                              rows_per_band: int) -> jax.Array:
+    """Band-by-band oracle for the row-tiled static kernel.
+
+    Computes the same "same"-padded conv one output-row band at a time,
+    each band seeing ONLY its overlapping input row band (the halo) — the
+    decomposition the banded Pallas grid executes. Pins that row-banding
+    is output-invariant: for every band size this equals
+    :func:`bitserial_conv_ref` bit for bit.
+    """
+    c = x.shape[-1]
+    wq = bitpack.unpack_weights(w_packed, w_bits, k=kernel * kernel * c)
+    w4 = wq.reshape(kernel, kernel, c, -1)
+    b, h, w_, _ = x.shape
+    pad = kernel // 2
+    ho, wo = -(-h // stride), -(-w_ // stride)
+    rpb = max(1, min(rows_per_band, ho))
+    xp = jnp.pad(x.astype(jnp.int32),
+                 ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    bands = []
+    for r0 in range(0, ho, rpb):
+        rows = min(rpb, ho - r0)
+        lo = r0 * stride
+        band = xp[:, lo:lo + (rows - 1) * stride + kernel]
+        bands.append(jax.lax.conv_general_dilated(
+            band, w4, window_strides=(stride, stride),
+            padding=((0, 0), (0, 0)),           # width already "same"-padded
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32))
+    return jnp.concatenate(bands, axis=1)
+
+
 def bitserial_conv_dynamic_ref(x: jax.Array, w_packed: jax.Array,
                                counts: jax.Array, *, kernel: int,
                                stride: int = 1, w_bits: int,
@@ -109,6 +142,55 @@ def bitserial_conv_dynamic_ref(x: jax.Array, w_packed: jax.Array,
     active = (p_idx < cmap[None]).astype(jnp.int32)
     eff = jnp.sum(bits * active * sign * (1 << p_idx), axis=0)
     y = jnp.matmul(eff, wq, preferred_element_type=jnp.int32)
+    return y.reshape(b, ho, wo, -1)
+
+
+def bitserial_conv_dynamic_banded_ref(x: jax.Array, w_packed: jax.Array,
+                                      counts: jax.Array, *, kernel: int,
+                                      stride: int = 1, w_bits: int,
+                                      group_size: int = 256) -> jax.Array:
+    """Band-local truncating oracle for the dynamic kernel's prologue.
+
+    Each window group's patch rows are assembled from ONLY its overlapping
+    input row band (the group-aligned band the tiled kernel stages), then
+    truncated at the group's count exactly like
+    :func:`bitserial_conv_dynamic_ref`. Equal to that full-image oracle
+    for ARBITRARY counts — pins tiled-vs-untiled parity of the dynamic
+    path including insufficient (really truncating) counts.
+    """
+    from repro.kernels.bitserial_conv import dyn_band_geometry
+    c = x.shape[-1]
+    kkc = kernel * kernel * c
+    wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)   # int32 [kkC, N]
+    b, h, w_, _ = x.shape
+    pad = kernel // 2
+    ho, wo = -(-h // stride), -(-w_ // stride)
+    nwin = ho * wo
+    gsz = group_size
+    ng = counts.shape[1]
+    rows_pg, band_rows = dyn_band_geometry(wo, gsz, kernel, stride)
+    xp = jnp.pad(x.astype(jnp.int32),
+                 ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    need = ((ng - 1) * gsz // wo) * stride + band_rows
+    if need > xp.shape[1]:
+        xp = jnp.pad(xp, ((0, 0), (0, need - xp.shape[1]), (0, 0), (0, 0)))
+    p_idx = jnp.arange(8, dtype=jnp.int32).reshape(8, 1, 1, 1)
+    outs = []
+    for g in range(ng):
+        w0 = g * gsz
+        lo = (w0 // wo) * stride
+        band = xp[:, lo:lo + band_rows]
+        flat = jnp.concatenate(
+            conv_window_slices(band, kernel, stride, rows_pg, wo),
+            axis=-1).reshape(b, rows_pg * wo, kkc)
+        rows = flat[:, w0 % wo:w0 % wo + gsz]      # the group's gsz windows
+        cg = counts[:, g].reshape(b, 1, 1)
+        bits = (rows[None] >> p_idx) & 1
+        sign = jnp.where(p_idx == cg[None] - 1, -1, 1)
+        active = (p_idx < cg[None]).astype(jnp.int32)
+        eff = jnp.sum(bits * active * sign * (1 << p_idx), axis=0)
+        outs.append(jnp.matmul(eff, wq, preferred_element_type=jnp.int32))
+    y = jnp.concatenate(outs, axis=1)[:, :nwin]
     return y.reshape(b, ho, wo, -1)
 
 

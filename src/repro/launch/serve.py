@@ -1,16 +1,18 @@
 """Serving launcher: prefill + decode steps over the Loom execution plans.
 
 ``repro.api.session.compile`` (a.k.a. ``loom.compile``) is the primary
-entry point now — it owns param conversion, cache init, and the jitted
+entry point — it owns param conversion, cache init, and the jitted
 prefill/decode pair behind a ``ServingSession``. This module keeps:
 
   * ``make_serve_fns`` / ``jit_serve_steps``: thin launch-layer wrappers
     used by the multi-pod dry-run (which jits against ShapeDtypeStructs
     and production meshes rather than real params);
   * the CPU demo driver (``python -m repro.launch.serve``), which runs
-    either through the new session API (``--api session``, default) or
-    the deprecated ``ExecConfig`` shim (``--api shim``) — both produce
-    identical generations for the same seed.
+    either through the session API (``--api session``, default) or the
+    hand-wired launch layer (``--api plan``: ``build_plan`` + explicit
+    param conversion + ``make_serve_fns``) — both produce identical
+    generations for the same seed, which is what the CI serve-smoke job
+    diffs.
 
 Modes: dense (DPNN-equivalent baseline), serve_int8 (LM_8b), serve_packed
 (bit-serial planes; Pw/16 weight bytes; ``--dynamic-a`` adds runtime
@@ -18,7 +20,7 @@ per-group activation-plane trimming — per group-of-rows on linears, per
 group-of-output-windows on convs). ``--arch paper-cnn`` serves the CNN
 classification cell, so the fused dynamic conv path runs end-to-end.
 ``--out-tokens FILE`` saves the generations/predictions as .npy — the CI
-serve-smoke job diffs the session run against the shim run with it.
+serve-smoke job diffs the session run against the plan run with it.
 """
 from __future__ import annotations
 
@@ -29,37 +31,40 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.api import backend as backendlib
+from repro.api import plan as planlib
 from repro.models import model as M
 
 
-def make_serve_fns(cfg, exec_cfg):
-    """(prefill_step, decode_step) closed over cfg + plan (or shim)."""
+def make_serve_fns(cfg, plan):
+    """(prefill_step, decode_step) closed over cfg + an ExecutionPlan."""
     def prefill_step(params, tokens, cache, img_embeds=None):
-        return M.prefill(params, cfg, tokens, cache, exec_cfg, img_embeds)
+        return M.prefill(params, cfg, tokens, cache, plan, img_embeds)
 
     def decode_step(params, token, pos, cache):
-        return M.decode_step(params, cfg, token, pos, cache, exec_cfg)
+        return M.decode_step(params, cfg, token, pos, cache, plan)
 
     return prefill_step, decode_step
 
 
-def jit_serve_steps(cfg, exec_cfg, mesh, param_specs, cache_specs,
+def jit_serve_steps(cfg, plan, mesh, param_specs, cache_specs,
                     batch_structs_specs=None):
     """Sharding-jitted (prefill, decode). One implementation, shared with
     the session API (repro.api.session._jit_lm) so the wiring cannot
     drift between the launch layer and ServingSession."""
     from repro.api.session import _jit_lm
-    return _jit_lm(cfg, exec_cfg, mesh, param_specs, cache_specs)
+    return _jit_lm(cfg, plan, mesh, param_specs, cache_specs)
 
 
 # ---------------------------------------------------------------------------
 # CPU-scale batched-serving driver
 # ---------------------------------------------------------------------------
 
-def _generate_shim(cfg, args, policy):
-    """The seed-era wiring, kept verbatim behind the ExecConfig shim."""
+def _generate_plan(cfg, args, policy):
+    """The hand-wired launch-layer cell: build_plan + explicit conversion.
+
+    Kept as the A/B cross-check of ``loom.compile`` — for the same seed
+    its generations must be byte-identical to the session path."""
     import numpy as np
-    from repro.models import layers as L
 
     params, specs = M.init_params(jax.random.PRNGKey(0), cfg)
     if args.mode != "dense":
@@ -67,11 +72,9 @@ def _generate_shim(cfg, args, policy):
                                                      args.mode)
         print(f"[serve] packed weights for mode={args.mode} "
               f"(Pw={args.w_bits}: weight bytes x{args.w_bits}/16 of bf16)")
-    use_pallas = args.backend != "xla"
-    interpret = args.backend != "pallas_tpu"
-    exec_cfg = L.ExecConfig(mode=args.mode, policy=policy,
-                            use_pallas=use_pallas, interpret=interpret)
-    prefill_fn, decode_fn = make_serve_fns(cfg, exec_cfg)
+    plan = planlib.build_plan(cfg, policy, mode=args.mode,
+                              backend=args.backend)
+    prefill_fn, decode_fn = make_serve_fns(cfg, plan)
     prefill_fn = jax.jit(prefill_fn)
     decode_fn = jax.jit(decode_fn, donate_argnums=(3,))
 
@@ -114,19 +117,18 @@ def _cnn_inputs(cfg, args):
                                         cfg.in_ch)), jnp.float32)
 
 
-def _classify_shim(cfg, args, policy):
-    """The CNN cell on the deprecated ExecConfig wiring."""
+def _classify_plan(cfg, args, policy):
+    """The CNN cell on the hand-wired launch-layer plan."""
     import numpy as np
-    from repro.models import cnn, layers as L, model as M
+    from repro.models import cnn, model as M
 
     params, specs = cnn.init_params(jax.random.PRNGKey(0), cfg)
     if args.mode != "dense":
         params, specs = M.convert_params_for_serving(params, specs, policy,
                                                      args.mode)
-    exec_cfg = L.ExecConfig(mode=args.mode, policy=policy,
-                            use_pallas=args.backend != "xla",
-                            interpret=args.backend != "pallas_tpu")
-    logits = jax.jit(lambda p, x: cnn.forward(p, cfg, x, exec_cfg))(
+    plan = planlib.build_plan(cfg, policy, mode=args.mode,
+                              backend=args.backend)
+    logits = jax.jit(lambda p, x: cnn.forward(p, cfg, x, plan))(
         params, _cnn_inputs(cfg, args))
     return np.argmax(np.asarray(logits), axis=-1)
 
@@ -147,9 +149,9 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--mode", default="serve_int8",
                     choices=["dense", "serve_int8", "serve_packed"])
-    ap.add_argument("--api", default="session", choices=["session", "shim"],
+    ap.add_argument("--api", default="session", choices=["session", "plan"],
                     help="session = loom.compile ServingSession; "
-                         "shim = deprecated ExecConfig wiring")
+                         "plan = hand-wired build_plan + make_serve_fns")
     ap.add_argument("--backend", default="xla",
                     choices=list(backendlib.list_backends()))
     ap.add_argument("--dynamic-a", action="store_true",
@@ -163,7 +165,7 @@ def main(argv=None):
     ap.add_argument("--w-bits", type=int, default=8)
     ap.add_argument("--out-tokens", default=None, metavar="FILE",
                     help="save the generations/predictions as .npy "
-                         "(CI diffs session vs shim runs)")
+                         "(CI diffs session vs plan runs)")
     args = ap.parse_args(argv)
 
     import numpy as np
@@ -176,13 +178,13 @@ def main(argv=None):
         import dataclasses as dc
         policy = dc.replace(policy, group_size=args.group_size)
     if hasattr(cfg, "convs"):            # CNN classification cell
-        cls_fn = _classify_session if args.api == "session" else _classify_shim
+        cls_fn = _classify_session if args.api == "session" else _classify_plan
         gen = cls_fn(cfg, args, policy)
         print(f"[serve] classified {gen.shape[0]} images via {args.api} "
               f"({args.backend}{', dynamic-a' if args.dynamic_a else ''}); "
               f"predictions: {gen}")
     else:
-        gen_fn = _generate_session if args.api == "session" else _generate_shim
+        gen_fn = _generate_session if args.api == "session" else _generate_plan
         gen = gen_fn(cfg, args, policy)
         print(f"[serve] generated {gen.shape} tokens via {args.api} "
               f"({args.backend}{', dynamic-a' if args.dynamic_a else ''}); "

@@ -14,14 +14,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.api import plan as planlib
 from repro.dist.sharding import resolve_tree
-from repro.models import layers as L, model as M
+from repro.models import model as M
 from repro.optim import (AdamWConfig, CompressionConfig, Schedule,
                          adamw_init, adamw_update, compress_state_init,
                          compressed_gradient, make_schedule)
@@ -46,7 +46,7 @@ def make_train_state(key, cfg, tc: TrainConfig):
     return state, sspecs
 
 
-def make_train_step(cfg, exec_cfg: L.ExecConfig, tc: TrainConfig):
+def make_train_step(cfg, exec_cfg: planlib.ExecutionPlan, tc: TrainConfig):
     sched_fn = make_schedule(tc.sched)
 
     def loss_of(p, mb):
@@ -126,9 +126,8 @@ def main(argv=None):
     from repro.launch.mesh import make_host_mesh
 
     cfg = configs.get(args.arch, smoke=args.smoke)
-    exec_cfg = L.ExecConfig(
-        mode=args.mode,
-        policy=uniform_policy(args.a_bits, args.w_bits))
+    exec_cfg = planlib.build_plan(
+        cfg, uniform_policy(args.a_bits, args.w_bits), mode=args.mode)
     tc = TrainConfig(accum=args.accum,
                      sched=Schedule(total_steps=args.steps, warmup_steps=5))
     mesh = make_host_mesh()

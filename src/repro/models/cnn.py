@@ -6,8 +6,9 @@ Convolutions run through the FUSED bit-serial conv path
 [B, Ho, Wo, k*k*C] patch tensor ever reaches HBM and activation traffic
 obeys the paper's bandwidth law. Weights keep the 2-D [k*k*Cin, Cout]
 matrix layout so profiling/packing are shared with the FC layers.
-``ExecConfig(conv_mode="im2col")`` selects the legacy materializing
-lowering for A/B benchmarks. Used by the Table-1 benchmark to run the
+``build_plan(..., conv_route="im2col")`` selects the legacy
+materializing lowering for A/B benchmarks. Used by the Table-1
+benchmark to run the
 Judd-style precision profiler and the dynamic-precision measurements
 live on CPU, and by the quickstart example. Scaled to CIFAR-size so it
 runs on this container.
@@ -18,7 +19,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as PS
 
 from repro.api import plan as planlib
 from repro.models import layers as L
@@ -87,7 +87,7 @@ def forward(params, cfg: CNNConfig, x: jax.Array, exec_cfg,
             collect_activations: bool = False):
     """x: [B, H, W, C] f32 -> logits [B, n_classes] (+ per-layer inputs).
 
-    ``exec_cfg``: an ExecutionPlan or the deprecated ExecConfig shim."""
+    ``exec_cfg``: an ExecutionPlan (``repro.api.build_plan``)."""
     xplan = planlib.as_plan(exec_cfg)
     acts = {}
     for c in cfg.convs:

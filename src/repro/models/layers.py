@@ -29,10 +29,9 @@ Serving routes require ``convert_params_for_serving`` to be run once over
 the trained param tree (it replaces each linear's "w" with the quantized /
 packed representation — the paper's offline weight packing step).
 
-``ExecConfig`` survives ONLY as a deprecated shim: it builds an
-``ExecutionPlan`` on first use (``as_plan``) so seed-era tests, examples,
-and A/B benchmarks keep running. New code should call
-``repro.api.build_plan`` / ``loom.compile`` directly.
+The seed-era string-mode + boolean-kernel-flags shim is GONE: every
+apply call takes an ``ExecutionPlan`` from ``repro.api.build_plan`` (or
+``loom.compile`` for serving).
 
 Params are plain nested dicts; a parallel dict of PartitionSpec with
 LOGICAL axis names ("fsdp"/"tp"/None, resolved by repro.dist.sharding)
@@ -40,43 +39,13 @@ is built by the same constructors.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
 from repro.api import plan as planlib
-from repro.api.backend import resolve_backend
 from repro.core import bitpack, quantize as q
-from repro.core.policy import PrecisionPolicy
 from repro.kernels import ops
-
-
-@dataclasses.dataclass(frozen=True)
-class ExecConfig:
-    """DEPRECATED shim over repro.api: string mode + boolean kernel flags.
-
-    Kept so existing call sites keep working; ``as_plan()`` compiles it to
-    an ``ExecutionPlan`` once (memoized per instance) and every apply-path
-    consumer dispatches on that plan. Prefer ``repro.api.build_plan`` (or
-    ``loom.compile`` for serving) in new code.
-    """
-    mode: str = "dense"              # dense | fake_quant | serve_int8 | serve_packed
-    policy: PrecisionPolicy = PrecisionPolicy()
-    use_pallas: bool = False         # deprecated: selects a backend
-    interpret: bool = True           # deprecated: selects a backend
-    conv_mode: str = "fused"         # fused | im2col (legacy A/B lowering)
-
-    def as_plan(self) -> planlib.ExecutionPlan:
-        built = self.__dict__.get("_plan")
-        if built is None:
-            built = planlib.build_plan(
-                None, policy=self.policy, mode=self.mode,
-                backend=resolve_backend(None, self.use_pallas, self.interpret),
-                conv_route=self.conv_mode)
-            object.__setattr__(self, "_plan", built)
-        return built
 
 
 def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -171,8 +140,7 @@ _LINEAR_ROUTES = {
 def linear_apply(p: dict, x: jax.Array, exec_cfg, layer_name: str = "") -> jax.Array:
     """Dispatch a linear through its resolved LayerPlan.
 
-    ``exec_cfg``: an ``ExecutionPlan`` (preferred) or a deprecated
-    ``ExecConfig`` shim (compiled to a plan on first use)."""
+    ``exec_cfg``: an ``ExecutionPlan`` (``repro.api.build_plan``)."""
     xplan = planlib.as_plan(exec_cfg)
     lp = xplan.layer(layer_name, kind="linear")
     return _LINEAR_ROUTES[lp.route](p, x, lp, xplan.backend)
@@ -193,18 +161,18 @@ def _as_hwio(w2, kernel, c_in):
     return w2.reshape(kernel, kernel, c_in, -1)
 
 
-def _conv_dense(p, x, kernel, stride, lp, be):
+def _conv_dense(p, x, kernel, stride, lp, xplan):
     return _conv_same(x, _as_hwio(p["w"], kernel, x.shape[-1]).astype(x.dtype),
                       stride)
 
 
-def _conv_fake_quant(p, x, kernel, stride, lp, be):
+def _conv_fake_quant(p, x, kernel, stride, lp, xplan):
     xq = q.fake_quant(x, lp.a_bits)
     wq = q.fake_quant(p["w"].astype(jnp.float32), lp.w_bits).astype(x.dtype)
     return _conv_same(xq, _as_hwio(wq, kernel, x.shape[-1]), stride)
 
 
-def _conv_int8(p, x, kernel, stride, lp, be):
+def _conv_int8(p, x, kernel, stride, lp, xplan):
     c_in = x.shape[-1]
     a_bits = min(lp.a_bits, 8)
     xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
@@ -214,17 +182,23 @@ def _conv_int8(p, x, kernel, stride, lp, be):
     return (y * (x_scale * p["w_scale"]).astype(jnp.float32)).astype(x.dtype)
 
 
-def _conv_packed(p, x, kernel, stride, lp, be):
+def _conv_packed(p, x, kernel, stride, lp, xplan):
     # Paper-faithful bit-serial conv over pre-packed planes. ``dynamic_a``
     # trims serial ACTIVATION planes per group of ``lp.group_size`` output
-    # windows at runtime (bit-identical to the static plane count).
+    # windows at runtime (bit-identical to the static plane count; its
+    # bands ARE the window groups, so no separate tile is resolved). The
+    # static kernel's band size comes from the plan's VMEM-budget
+    # heuristic, resolved once per layer from the activation geometry.
     if lp.dynamic_a:
         return ops.loom_conv_serve_dynamic(
             x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
-            a_bits=lp.a_bits, group_size=lp.group_size, backend=be)
+            a_bits=lp.a_bits, group_size=lp.group_size,
+            backend=xplan.backend)
+    tile = xplan.conv_tile(lp, x.shape[1], x.shape[2], x.shape[3],
+                           p["w_packed"].shape[-1], p["w_packed"].shape[0])
     return ops.loom_conv_serve(
         x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
-        a_bits=lp.a_bits, backend=be)
+        a_bits=lp.a_bits, backend=xplan.backend, conv_tile=tile)
 
 
 _CONV_ROUTES = {
@@ -248,7 +222,7 @@ def conv_apply(p: dict, x: jax.Array, kernel: int, stride: int,
     """
     xplan = planlib.as_plan(exec_cfg)
     lp = xplan.layer(layer_name, kind="conv", kernel=kernel, stride=stride)
-    return _CONV_ROUTES[lp.route](p, x, kernel, stride, lp, xplan.backend)
+    return _CONV_ROUTES[lp.route](p, x, kernel, stride, lp, xplan)
 
 
 # ---------------------------------------------------------------------------

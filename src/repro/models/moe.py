@@ -113,7 +113,7 @@ def _expert_mm(buf: jax.Array, p: dict, key: str, x_dtype) -> jax.Array:
     return jnp.einsum("becd,edf->becf", buf, w.astype(buf.dtype))
 
 
-def apply(p, cfg: MoEConfig, x: jax.Array, exec_cfg: L.ExecConfig):
+def apply(p, cfg: MoEConfig, x: jax.Array, exec_cfg: planlib.ExecutionPlan):
     """x: [B, S, d]. Returns (y, aux_loss). Dispatch is per sequence row."""
     if cfg.shard_map_ep:
         return apply_shardmap(p, cfg, x, exec_cfg)
@@ -242,7 +242,8 @@ def _local_moe(cfg: MoEConfig, e_local: int, tp_axis: str, x_l, rw,
     return comb, aux
 
 
-def apply_shardmap(p, cfg: MoEConfig, x: jax.Array, exec_cfg: L.ExecConfig):
+def apply_shardmap(p, cfg: MoEConfig, x: jax.Array,
+                   exec_cfg: planlib.ExecutionPlan):
     """shard_map-EP forward. Requires n_experts % tp == 0 and an ambient
     mesh; falls back to apply() otherwise."""
     from jax.sharding import PartitionSpec as P

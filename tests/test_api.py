@@ -3,7 +3,8 @@
 Covers the acceptance bar of the api_redesign PR:
   * build_plan resolves per-layer plans once (kind, route, precision,
     conv geometry, dynamic-trim config);
-  * the ExecConfig shim compiles to an equivalent plan (deprecation path);
+  * as_plan rejects anything that is not an ExecutionPlan (the old
+    string-mode shim is retired);
   * serve_packed + dynamic_a=True is bit-identical to the static path on
     both the xla and pallas_interpret backends across (Pa, Pw) in
     {(8,8), (4,4), (8,11)}, at the ops level and end-to-end through
@@ -85,24 +86,36 @@ def test_backend_registry_round_trip():
         loom.backend._REGISTRY.pop("mine")
 
 
-def test_execconfig_shim_compiles_equivalent_plan():
-    """The deprecated shim must produce the same numbers as a real plan."""
+def test_as_plan_accepts_only_execution_plans():
+    """The retired string-mode shim no longer exists; apply paths accept
+    exactly one config type, and reject anything else loudly."""
     policy = uniform_policy(8, 8)
-    ec = L.ExecConfig(mode="serve_packed", policy=policy)
-    plan = ec.as_plan()
-    assert ec.as_plan() is plan          # memoized: resolved once
-    assert plan.mode == "serve_packed" and plan.backend.name == "xla"
+    plan = loom.build_plan(None, policy, "serve_packed")
+    assert planlib.as_plan(plan) is plan
+    with pytest.raises(TypeError):
+        planlib.as_plan(object())
+    assert not hasattr(L, "Exec" + "Config")     # the shim class is gone
 
-    rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
-    p, spec = L.linear_init(jax.random.PRNGKey(0), 64, 32, dtype=jnp.float32)
-    packed, _ = L.convert_linear_for_serving(p, spec, policy.lookup("fc"),
-                                             "serve_packed")
-    y_shim = L.linear_apply(packed, x, ec, "fc")
-    y_plan = L.linear_apply(packed, x,
-                            loom.build_plan(None, policy, "serve_packed"),
-                            "fc")
-    np.testing.assert_array_equal(np.asarray(y_shim), np.asarray(y_plan))
+
+def test_xla_dynamic_linear_group_mask_matches_oracle():
+    """The production XLA matmul_planes_dynamic (per-column-group
+    arithmetic mask) must match the truncating plane oracle for ARBITRARY
+    counts — including insufficient ones that really truncate."""
+    rng = np.random.default_rng(5)
+    pa, m, k, n, bn = 8, 16, 64, 32, 8
+    wq = jnp.asarray(rng.integers(q.qmin(pa), q.qmax(pa) + 1, size=(k, n)),
+                     jnp.int32)
+    wp = bitpack.pack_weights(wq, pa)
+    x = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    counts = jnp.asarray(rng.integers(1, pa - 2, size=(n // bn,)), jnp.int32)
+    from repro.kernels import ref
+    y_ref = ref.bitserial_matmul_dynamic_ref(x, wp, counts, pa, bn)
+    y_xla = loom.get_backend("xla").matmul_planes_dynamic(
+        x, wp, counts, w_bits=pa, bn=bn)
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_xla))
+    # the low counts really truncate: differs from the full-width matmul
+    assert not np.array_equal(np.asarray(y_ref),
+                              np.asarray(ref.bitserial_matmul_ref(x, wp, pa)))
 
 
 # ---------------------------------------------------------------------------
@@ -235,9 +248,9 @@ def test_session_dynamic_stats_report():
 # ServingSession vs legacy serve wiring
 # ---------------------------------------------------------------------------
 
-def test_session_matches_legacy_serve_generations():
-    """Identical generations for the same seed: the acceptance criterion
-    for porting launch/serve.py onto the session API."""
+def test_session_matches_hand_wired_serve_generations():
+    """Identical generations for the same seed: loom.compile vs the
+    hand-wired build_plan + make_serve_fns launch-layer cell."""
     import argparse
     from repro.launch import serve as serve_mod
 
@@ -245,9 +258,9 @@ def test_session_matches_legacy_serve_generations():
     policy = uniform_policy(8, 8)
     args = argparse.Namespace(mode="serve_packed", backend="xla", batch=2,
                               prompt_len=8, gen_len=4, a_bits=8, w_bits=8)
-    gen_shim = serve_mod._generate_shim(cfg, args, policy)
+    gen_plan = serve_mod._generate_plan(cfg, args, policy)
     gen_session = serve_mod._generate_session(cfg, args, policy)
-    np.testing.assert_array_equal(gen_shim, gen_session)
+    np.testing.assert_array_equal(gen_plan, gen_session)
 
 
 def test_serve_cli_session_dynamic(capsys):

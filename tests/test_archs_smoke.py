@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.api as loom
 from repro import configs
-from repro.models import layers as L, model as M
+from repro.models import model as M
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -30,7 +31,7 @@ def test_forward_shapes_and_finite(arch):
     cfg = configs.get(arch, smoke=True)
     params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
     batch = make_batch(cfg)
-    exec_cfg = L.ExecConfig(mode="dense")
+    exec_cfg = loom.build_plan(cfg, mode="dense")
     logits, aux = M.forward_train(params, cfg, batch["tokens"], exec_cfg,
                                   batch.get("img_embeds"))
     assert logits.shape == (2, 32, cfg.vocab)
@@ -43,7 +44,7 @@ def test_train_step_grads_finite(arch):
     cfg = configs.get(arch, smoke=True)
     params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
     batch = make_batch(cfg)
-    exec_cfg = L.ExecConfig(mode="dense")
+    exec_cfg = loom.build_plan(cfg, mode="dense")
 
     def loss(p):
         l, _ = M.loss_fn(p, cfg, batch, exec_cfg)
@@ -63,7 +64,7 @@ def test_prefill_then_decode(arch):
     decode path consumes/produces a consistent cache."""
     cfg = configs.get(arch, smoke=True)
     params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
-    exec_cfg = L.ExecConfig(mode="dense")
+    exec_cfg = loom.build_plan(cfg, mode="dense")
     b, s = 2, 16
     batch = make_batch(cfg, b=b, s=s)
     cache = M.init_cache(cfg, b, cfg.max_seq)
@@ -86,8 +87,8 @@ def test_loom_modes_forward(mode):
     cfg = configs.get("qwen3-1.7b", smoke=True)
     params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
     batch = make_batch(cfg)
-    dense = L.ExecConfig(mode="dense")
-    quant8 = L.ExecConfig(mode=mode, policy=uniform_policy(8, 8))
+    dense = loom.build_plan(cfg, mode="dense")
+    quant8 = loom.build_plan(cfg, uniform_policy(8, 8), mode)
     l_d, _ = M.forward_train(params, cfg, batch["tokens"], dense)
     l_q, _ = M.forward_train(params, cfg, batch["tokens"], quant8)
     assert bool(jnp.all(jnp.isfinite(l_q.astype(jnp.float32))))
@@ -105,8 +106,8 @@ def test_serving_conversion_roundtrip():
     batch = make_batch(cfg)
     policy = uniform_policy(8, 8)
     sp, _ = M.convert_params_for_serving(params, specs, policy, "serve_int8")
-    dense = L.ExecConfig(mode="dense")
-    serve = L.ExecConfig(mode="serve_int8", policy=policy)
+    dense = loom.build_plan(cfg, mode="dense")
+    serve = loom.build_plan(cfg, policy, "serve_int8")
     l_d, _ = M.forward_train(params, cfg, batch["tokens"], dense)
     l_q, _ = M.forward_train(sp, cfg, batch["tokens"], serve)
     corr = np.corrcoef(np.asarray(l_d, np.float32).ravel(),
@@ -120,7 +121,7 @@ def test_paper_cnn_forward():
     params, _ = cnn.init_params(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(np.random.default_rng(0).normal(size=(4, cfg.img, cfg.img, 3)),
                     jnp.float32)
-    logits = cnn.forward(params, cfg, x, L.ExecConfig(mode="dense"))
+    logits = cnn.forward(params, cfg, x, loom.build_plan(cfg, mode="dense"))
     assert logits.shape == (4, 10)
     assert bool(jnp.all(jnp.isfinite(logits)))
 
@@ -145,8 +146,8 @@ def test_mixed_precision_packed_serving():
     assert packed["blocks"]["p0"]["mix"]["wq"]["w_packed"].shape[1] == 10
     assert packed["head"]["w_packed"].shape[0] == 12
     batch = make_batch(cfg)
-    dense = L.ExecConfig(mode="dense")
-    serve = L.ExecConfig(mode="serve_packed", policy=policy)
+    dense = loom.build_plan(cfg, mode="dense")
+    serve = loom.build_plan(cfg, policy, "serve_packed")
     l_d, _ = M.forward_train(params, cfg, batch["tokens"], dense)
     l_q, _ = M.forward_train(packed, cfg, batch["tokens"], serve)
     corr = np.corrcoef(np.asarray(l_d, np.float32).ravel(),

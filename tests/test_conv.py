@@ -3,8 +3,8 @@
 The specification: for every geometry, bitserial_conv (Pallas interpret)
 and bitserial_conv_ref (one XLA integer conv) must equal im2col +
 reference_int_matmul on the SAME quantized operands, bit for bit. Then
-the model-level wiring: cnn.forward under conv_mode="fused" must equal
-conv_mode="im2col" in every exec mode.
+the model-level wiring: cnn.forward under conv_route="fused" must equal
+conv_route="im2col" in every exec mode.
 """
 import numpy as np
 import pytest
@@ -12,6 +12,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+import repro.api as loom
 from repro.core import bitpack, engine, quantize as q
 from repro.core.policy import uniform_policy
 from repro.kernels import ref
@@ -102,19 +103,19 @@ def _cnn_setup(mode):
 def test_cnn_fused_equals_im2col_every_mode(mode):
     cfg, params, pol, x = _cnn_setup(mode)
     yf = cnn.forward(params, cfg, x,
-                     L.ExecConfig(mode=mode, policy=pol, conv_mode="fused"))
+                     loom.build_plan(cfg, pol, mode, conv_route="fused"))
     yi = cnn.forward(params, cfg, x,
-                     L.ExecConfig(mode=mode, policy=pol, conv_mode="im2col"))
+                     loom.build_plan(cfg, pol, mode, conv_route="im2col"))
     np.testing.assert_array_equal(np.asarray(yf), np.asarray(yi))
 
 
 def test_cnn_serve_packed_pallas_equals_xla():
     cfg, params, pol, x = _cnn_setup("serve_packed")
     y_xla = cnn.forward(params, cfg, x,
-                        L.ExecConfig(mode="serve_packed", policy=pol))
+                        loom.build_plan(cfg, pol, "serve_packed", "xla"))
     y_pal = cnn.forward(params, cfg, x,
-                        L.ExecConfig(mode="serve_packed", policy=pol,
-                                     use_pallas=True, interpret=True))
+                        loom.build_plan(cfg, pol, "serve_packed",
+                                        "pallas_interpret"))
     np.testing.assert_array_equal(np.asarray(y_pal), np.asarray(y_xla))
 
 
@@ -131,7 +132,7 @@ def test_conv_serve_clamps_wide_activation_profiles():
     ws = jnp.float32(0.01)
     y_xla = ops.loom_conv_serve(x, wp, ws, kernel=3, stride=1, a_bits=16)
     y_pal = ops.loom_conv_serve(x, wp, ws, kernel=3, stride=1, a_bits=16,
-                                use_pallas=True)
+                                backend="pallas_interpret")
     np.testing.assert_array_equal(np.asarray(y_pal), np.asarray(y_xla))
 
 

@@ -237,7 +237,7 @@ def test_cnn_forward_dynamic_equals_static(backend):
 
 def test_serve_cli_cnn_dynamic(capsys, tmp_path):
     """The demo driver's CNN cell end-to-end with dynamic trimming: the
-    session and shim wirings classify identically."""
+    session and hand-wired plan wirings classify identically."""
     from repro.launch import serve as serve_mod
     out_a = tmp_path / "a.npy"
     out_b = tmp_path / "b.npy"
@@ -245,7 +245,7 @@ def test_serve_cli_cnn_dynamic(capsys, tmp_path):
                     "--api", "session", "--dynamic-a", "--batch", "2",
                     "--out-tokens", str(out_a)])
     serve_mod.main(["--arch", "paper-cnn", "--mode", "serve_packed",
-                    "--api", "shim", "--dynamic-a", "--batch", "2",
+                    "--api", "plan", "--dynamic-a", "--batch", "2",
                     "--out-tokens", str(out_b)])
     out = capsys.readouterr().out
     assert "classified" in out and "done" in out

@@ -11,10 +11,11 @@ _SCRIPT = textwrap.dedent("""
     import sys
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp, numpy as np
-    from repro.models import moe as MOE, layers as L
+    import repro.api as loom
+    from repro.models import moe as MOE
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    ec = L.ExecConfig(mode="dense")
+    ec = loom.build_plan(None, mode="dense")
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(4, 16, 32)), jnp.float32)
 

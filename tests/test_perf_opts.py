@@ -6,8 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.api as loom
 from repro import configs
-from repro.models import attention as A, layers as L, model as M
+from repro.models import attention as A, model as M
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -151,7 +152,7 @@ def test_flash_vjp_full_model_grads_close():
                                    jnp.int32),
              "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)),
                                    jnp.int32)}
-    ec = L.ExecConfig(mode="dense")
+    ec = loom.build_plan(cfg, mode="dense")
 
     g1 = jax.grad(lambda p: M.loss_fn(p, cfg, batch, ec)[0])(params)
     g2 = jax.grad(lambda p: M.loss_fn(p, cfg_f, batch, ec)[0])(params)
@@ -171,7 +172,7 @@ def test_kv_col_parallel_same_math():
     params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
-    ec = L.ExecConfig(mode="dense")
+    ec = loom.build_plan(cfg, mode="dense")
     o1, _ = M.forward_train(params, cfg, toks, ec)
     o2, _ = M.forward_train(params, cfg_k, toks, ec)
     np.testing.assert_allclose(np.asarray(o1, np.float32),
