@@ -11,12 +11,14 @@ LINT_PATHS = src/repro/api \
              src/repro/models/layers.py \
              src/repro/models/cnn.py \
              src/repro/core/dynamic.py \
+             src/repro/core/weightgroups.py \
              src/repro/launch/serve.py \
              benchmarks/kernelbench.py \
              benchmarks/bench_compare.py \
              tests/test_api.py \
              tests/test_conv_dynamic.py \
-             tests/test_conv_tiled.py
+             tests/test_conv_tiled.py \
+             tests/test_wgroup.py
 
 .PHONY: test bench bench-smoke bench-check lint
 

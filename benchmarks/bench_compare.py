@@ -18,6 +18,17 @@ MODELED quantities the paper's claims rest on:
   * config coverage — a config present in the baseline must exist in the
     fresh run (a silently dropped bench section reads as "no regression").
 
+``measured_speedup`` is additionally gated as a TRACKED (non-exact)
+field at a LOOSE tolerance (--tracked-tolerance, default 50%): these are
+CPU/interpret-mode wall-clock ratios, so the gate only catches gross
+drift, not noise. The caveat that motivates tracking them at all: the
+``dynamic_*`` configs MEASURE well below what they MODEL (0.26-0.41x vs
+1.45-1.88x) because the XLA oracle realizes runtime trimming as an
+arithmetic mask — masked work is not deleted work. Gating the measured
+value keeps that honesty gap visible and stops it drifting silently;
+the ``wgroup_*``/``stem_*`` configs, whose trimming IS deleted at trace
+time, must keep their measured wins.
+
 Exit status 0 = no regression; 1 = regression(s), printed per field.
 Used by ``make bench-check`` and CI's bench-regression job::
 
@@ -39,6 +50,13 @@ TOLERANCED_FIELDS = {
     "plane_fraction_executed": "lower_better",
 }
 
+# Tracked (non-exact) wall-clock-derived fields: same directional check as
+# TOLERANCED_FIELDS but at the loose --tracked-tolerance (see module
+# docstring for the interpret-mode caveat).
+TRACKED_FIELDS = {
+    "measured_speedup": "higher_better",
+}
+
 # Law fields: integer/ratio accounting that must match EXACTLY.
 EXACT_FIELDS = ("passes", "weight_bytes", "act_bytes", "im2col_patch_bytes",
                 "patch_hbm_bytes", "weight_bytes_vs_base", "group_size",
@@ -48,10 +66,19 @@ EXACT_FIELDS = ("passes", "weight_bytes", "act_bytes", "im2col_patch_bytes",
                 "rows_per_band", "n_bands", "conv_tile",
                 "vmem_bytes_banded", "vmem_bytes_untiled",
                 "vmem_budget_bytes", "fits_untiled", "dyn_group_size",
-                "dyn_patch_rows_per_group", "dyn_patch_rows_full_image")
+                "dyn_patch_rows_per_group", "dyn_patch_rows_full_image",
+                # wgroup_*: static per-filter-group weight trimming —
+                # pack-time plane-count and per-group storage laws, and
+                # the composed dynamic_a plane-PAIR law.
+                "w_group", "n_wgroups", "wgroup_plane_passes",
+                "wgroup_plane_passes_static", "wgroup_weight_bytes",
+                "composed_plane_passes", "composed_plane_passes_static",
+                # stem_*: the small-C fold A/B.
+                "stem_kkc", "stem_folded")
 
 
-def compare(baseline: dict, fresh: dict, tolerance: float):
+def compare(baseline: dict, fresh: dict, tolerance: float,
+            tracked_tolerance: float = 0.5):
     """Returns (failures, notes): lists of human-readable strings."""
     failures, notes = [], []
     base_cfgs = baseline.get("configs", {})
@@ -71,23 +98,27 @@ def compare(baseline: dict, fresh: dict, tolerance: float):
                     failures.append(f"{name}.{field}: law drift "
                                     f"{b[field]!r} -> {f[field]!r} "
                                     f"(must match exactly)")
-        for field, direction in TOLERANCED_FIELDS.items():
+        toleranced = [(fld, d, tolerance, "modeled")
+                      for fld, d in TOLERANCED_FIELDS.items()]
+        toleranced += [(fld, d, tracked_tolerance, "tracked")
+                       for fld, d in TRACKED_FIELDS.items()]
+        for field, direction, tol, kind in toleranced:
             if field not in b:
                 continue
             if field not in f:
-                failures.append(f"{name}.{field}: modeled field missing "
+                failures.append(f"{name}.{field}: {kind} field missing "
                                 f"from the fresh run")
                 continue
             bv, fv = float(b[field]), float(f[field])
             rel = (fv - bv) / bv
-            regressed = rel < -tolerance if direction == "higher_better" \
-                else rel > tolerance
+            regressed = rel < -tol if direction == "higher_better" \
+                else rel > tol
             if regressed:
                 failures.append(
                     f"{name}.{field}: {bv:.4g} -> {fv:.4g} "
-                    f"({rel:+.1%}, tolerance {tolerance:.0%}, "
+                    f"({rel:+.1%}, tolerance {tol:.0%}, "
                     f"{direction})")
-            elif abs(rel) > tolerance:
+            elif abs(rel) > tol and kind == "modeled":
                 notes.append(f"{name}.{field}: improved {bv:.4g} -> "
                              f"{fv:.4g} ({rel:+.1%}) — consider "
                              f"re-committing BENCH_kernel.json")
@@ -102,6 +133,10 @@ def main():
                     help="a just-produced kernelbench output")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="relative tolerance on the modeled fields")
+    ap.add_argument("--tracked-tolerance", type=float, default=0.5,
+                    help="loose relative tolerance on the tracked "
+                         "wall-clock-derived fields (measured_speedup): "
+                         "catches gross drift, tolerates CPU noise")
     args = ap.parse_args()
 
     with open(args.baseline) as fh:
@@ -109,7 +144,8 @@ def main():
     with open(args.fresh) as fh:
         fresh = json.load(fh)
 
-    failures, notes = compare(baseline, fresh, args.tolerance)
+    failures, notes = compare(baseline, fresh, args.tolerance,
+                              args.tracked_tolerance)
     for n in notes:
         print(f"[bench-compare] note: {n}")
     if failures:
@@ -121,7 +157,8 @@ def main():
     n_checked = len(baseline.get("configs", {}))
     print(f"[bench-compare] OK — {n_checked} configs, no regressions "
           f"(tolerance {args.tolerance:.0%} on "
-          f"{'/'.join(TOLERANCED_FIELDS)})")
+          f"{'/'.join(TOLERANCED_FIELDS)}; {args.tracked_tolerance:.0%} "
+          f"tracked on {'/'.join(TRACKED_FIELDS)})")
 
 
 if __name__ == "__main__":

@@ -28,10 +28,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.weightgroups import (truncate_columns_grouped,
+                                     truncate_signed as _truncate_signed)
 from repro.kernels import ref
 from repro.kernels.bitserial_conv import (bitserial_conv,
-                                          bitserial_conv_dynamic)
+                                          bitserial_conv_dynamic,
+                                          bitserial_conv_wgroup)
 from repro.kernels.bitserial_matmul import (bitserial_matmul,
                                             bitserial_matmul_dynamic)
 from repro.kernels.dynamic_quant import dynamic_quant
@@ -50,14 +54,35 @@ def _pallas_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
     return bm, bn, bk
 
 
-def _truncate_signed(v: jax.Array, counts: jax.Array) -> jax.Array:
-    """2's-complement truncation of ``v`` at per-element width ``counts``:
-    keep the low ``counts`` bits, reinterpret signed at that width. The
-    ONE group-mask idiom both dynamic XLA routes (linear column groups,
-    conv window groups) realize trimming with — value-preserving whenever
-    v fits in counts bits, the truncating-oracle semantics otherwise."""
-    low = v & ((1 << counts) - 1)
-    return low - (((low >> (counts - 1)) & 1) << counts)
+# _truncate_signed (imported above): 2's-complement truncation at a
+# per-element width — the ONE group-mask idiom every trimming route
+# (dynamic linear column groups, dynamic conv window groups, static
+# weight filter groups) realizes; canonical home: core.weightgroups.
+
+
+def _wgroup_partitions(w_counts, w_group: int, n: int):
+    """Trace-time partition of the N output columns by plane count.
+
+    ``w_counts`` are pack-time Python ints (``LayerPlan.w_group_counts``),
+    so this runs at trace time: returns ``[(count, cols)]`` with the
+    column indices of every group sharing that count (ragged last group
+    covers only its real columns), plus the inverse permutation that
+    restores column order after the per-partition results are
+    concatenated. This is what turns static sub-layer weight precision
+    into DELETED work on the XLA backend — each partition executes only
+    its count's worth of planes/precision — instead of a runtime mask.
+    """
+    assert len(w_counts) == -(-n // w_group), (len(w_counts), n, w_group)
+    by_count: dict[int, list] = {}
+    for g, c in enumerate(w_counts):
+        by_count.setdefault(int(c), []).extend(
+            range(g * w_group, min((g + 1) * w_group, n)))
+    parts = [(c, np.asarray(cols, np.int64))
+             for c, cols in sorted(by_count.items())]
+    order = np.concatenate([cols for _, cols in parts])
+    inv = np.empty(n, np.int64)
+    inv[order] = np.arange(n)
+    return parts, inv
 
 
 class Backend:
@@ -72,9 +97,39 @@ class Backend:
     vmem_budget: int | None = None
 
     def matmul_planes(self, xq: jax.Array, w_packed: jax.Array, *,
-                      w_bits: int) -> jax.Array:
-        """int8 [M, K] @ packed uint8 [Pw, K//8, N] -> exact int32 [M, N]."""
-        return ref.bitserial_matmul_ref(xq, w_packed, w_bits)
+                      w_bits: int, a_bits: int = 8, w_counts=None,
+                      w_group: int = 16) -> jax.Array:
+        """int8 [M, K] @ packed uint8 [Pw, K//8, N] -> exact int32 [M, N].
+
+        ``w_counts`` (pack-time per-filter-group plane counts, Python
+        ints from ``LayerPlan.w_group_counts``; ``w_group`` columns per
+        group) enables STATIC weight-plane trimming: the N columns are
+        partitioned by count at trace time and each partition unpacks
+        and multiplies only its ``count`` planes (2's-complement
+        truncation at that width — value-preserving for OR-tree counts).
+        Low-count partitions additionally qualify for the exact-f32 GEMM
+        fast path (every partial sum fits a float32 mantissa once the
+        weight width shrinks), which is where the measured XLA wall-clock
+        win comes from — work is deleted at trace time, not masked.
+        """
+        if w_counts is None or all(c >= w_bits for c in w_counts):
+            return ref.bitserial_matmul_ref(xq, w_packed, w_bits)
+        from repro.core import bitpack
+        from repro.kernels.ops import conv_accum_fits_f32
+        k8 = w_packed.shape[1] * 8
+        parts, inv = _wgroup_partitions(w_counts, w_group,
+                                        w_packed.shape[-1])
+        outs = []
+        for c, cols in parts:
+            wq_c = bitpack.unpack_weights(w_packed[:c][:, :, cols], c)
+            if conv_accum_fits_f32(k8, a_bits, c):
+                outs.append(jnp.matmul(
+                    xq.astype(jnp.float32),
+                    wq_c.astype(jnp.float32)).astype(jnp.int32))
+            else:
+                outs.append(jnp.matmul(xq.astype(jnp.int32), wq_c,
+                                       preferred_element_type=jnp.int32))
+        return jnp.take(jnp.concatenate(outs, axis=-1), inv, axis=-1)
 
     def matmul_planes_dynamic(self, xq: jax.Array, w_packed: jax.Array,
                               plane_counts: jax.Array, *, w_bits: int,
@@ -102,24 +157,45 @@ class Backend:
 
     def conv_planes(self, xq: jax.Array, w_packed: jax.Array, *, kernel: int,
                     stride: int, w_bits: int, a_bits: int,
-                    conv_tile: int | None = None) -> jax.Array:
+                    conv_tile: int | None = None, w_counts=None,
+                    w_group: int = 16) -> jax.Array:
         """Fused bit-serial "same" conv: int [B,H,W,C] x packed planes ->
         exact int32 [B, Ho, Wo, N]. No im2col patch tensor in HBM.
         ``conv_tile`` (rows per band) only matters to VMEM-constrained
-        backends; the XLA lowering ignores it."""
+        backends; the XLA lowering ignores it.
+
+        ``w_counts``/``w_group``: static per-filter-group weight-plane
+        trimming — output filters are partitioned by their pack-time
+        plane count at trace time and each partition runs its own
+        shift-and-matmul window walk at that count's precision (the
+        exact-f32 GEMM fast path engages per partition once the
+        accumulator fits a float32 mantissa at the reduced weight
+        width). Bit-identical to the untrimmed path for OR-tree counts.
+        """
         from repro.core import bitpack
         from repro.kernels import ops
         c = xq.shape[-1]
         kkc = kernel * kernel * c
-        wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)
-        return ops.int_conv_same(
-            xq, wq.reshape(kernel, kernel, c, -1), stride,
-            exact_f32=ops.conv_accum_fits_f32(kkc, a_bits, w_bits))
+        if w_counts is None or all(cc >= w_bits for cc in w_counts):
+            wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)
+            return ops.int_conv_same(
+                xq, wq.reshape(kernel, kernel, c, -1), stride,
+                exact_f32=ops.conv_accum_fits_f32(kkc, a_bits, w_bits))
+        parts, inv = _wgroup_partitions(w_counts, w_group,
+                                        w_packed.shape[-1])
+        outs = []
+        for cnt, cols in parts:
+            wq_c = bitpack.unpack_weights(w_packed[:cnt][:, :, cols], cnt,
+                                          k=kkc)
+            outs.append(ops.int_conv_same(
+                xq, wq_c.reshape(kernel, kernel, c, -1), stride,
+                exact_f32=ops.conv_accum_fits_f32(kkc, a_bits, cnt)))
+        return jnp.take(jnp.concatenate(outs, axis=-1), inv, axis=-1)
 
     def conv_planes_dynamic(self, xq: jax.Array, w_packed: jax.Array,
                             counts: jax.Array, *, kernel: int, stride: int,
-                            w_bits: int, a_bits: int,
-                            group_size: int) -> jax.Array:
+                            w_bits: int, a_bits: int, group_size: int,
+                            w_counts=None, w_group: int = 16) -> jax.Array:
         """Like conv_planes but each group of ``group_size`` output windows
         executes only counts[b, g] serial activation planes.
 
@@ -130,11 +206,20 @@ class Backend:
         keep the low ``count`` bits, reinterpret signed at that width —
         fused into the k*k shift-and-matmul window walk, so no Pa-plane
         stack and no im2col patch tensor exist on this path either.
+
+        ``w_counts``/``w_group`` compose static weight-group trimming in:
+        the weights are truncated per filter group at their pack-time
+        effective width (the same mask idiom on the other operand) —
+        value-preserving for OR-tree counts, so the composed result stays
+        bit-identical to the static conv; the modeled pass count becomes
+        mean_Pa_eff x mean_Pw_eff over the group intersections.
         """
         from repro.core import bitpack
         c = xq.shape[-1]
         kkc = kernel * kernel * c
         wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)
+        if w_counts is not None:
+            wq = truncate_columns_grouped(wq, w_counts, w_group)
         w2 = wq.reshape(kernel * kernel, c, -1)
         b, h, w_, _ = xq.shape
         pad = kernel // 2
@@ -183,12 +268,34 @@ class PallasBackend(Backend):
         self.interpret = interpret
         self.vmem_budget = vmem_budget
 
-    def matmul_planes(self, xq, w_packed, *, w_bits):
+    def matmul_planes(self, xq, w_packed, *, w_bits, a_bits=8, w_counts=None,
+                      w_group=16):
         m, k = xq.shape
         n = w_packed.shape[-1]
-        bm, bn, bk = _pallas_blocks(m, n, k)
-        return bitserial_matmul(xq, w_packed, w_bits=w_bits, bm=bm, bn=bn,
-                                bk=bk, interpret=self.interpret)
+        # All-full counts (nothing trimmable, e.g. random-init weights on
+        # the per-tensor scale) keep the tuned static kernel — same
+        # no-op guard as the XLA route, without which every default
+        # serving session would pay the bn=w_group tile shrink for zero
+        # skipped planes.
+        if w_counts is None or all(c >= w_bits for c in w_counts):
+            bm, bn, bk = _pallas_blocks(m, n, k)
+            return bitserial_matmul(xq, w_packed, w_bits=w_bits, bm=bm,
+                                    bn=bn, bk=bk, interpret=self.interpret)
+        # Static weight-group trimming reuses the dynamic-precision kernel
+        # verbatim: the packed operand here IS the weights, the N-tile is
+        # the filter group, and the scalar-prefetch counts are the
+        # pack-time constants from the plan — pl.when skips whole
+        # (plane x filter-group) grid steps, so on TPU the dead planes'
+        # tiles are never even fetched from HBM. Ragged last group: pad N
+        # with zero columns (they fit any count), slice the result back.
+        npad = (-n) % w_group
+        wp = jnp.pad(w_packed, ((0, 0), (0, 0), (0, npad))) if npad \
+            else w_packed
+        bm, _, bk = _pallas_blocks(m, n + npad, k)
+        y = bitserial_matmul_dynamic(
+            xq, wp, jnp.asarray(w_counts, jnp.int32), w_bits=w_bits,
+            bm=bm, bn=w_group, bk=bk, interpret=self.interpret)
+        return y[:, :n] if npad else y
 
     def matmul_planes_dynamic(self, xq, w_packed, plane_counts, *, w_bits,
                               bn):
@@ -200,20 +307,44 @@ class PallasBackend(Backend):
                                         interpret=self.interpret)
 
     def conv_planes(self, xq, w_packed, *, kernel, stride, w_bits, a_bits,
-                    conv_tile=None):
-        return bitserial_conv(xq.astype(jnp.int8), w_packed, kernel=kernel,
-                              stride=stride, w_bits=w_bits,
-                              rows_per_band=conv_tile,
-                              interpret=self.interpret)
+                    conv_tile=None, w_counts=None, w_group=16):
+        # Same all-full-counts no-op guard as matmul_planes: untrimmable
+        # counts stay on the static kernel (one patch assembly per
+        # band/N-tile at bn=128, plane loop unrolled in-body).
+        if w_counts is None or all(c >= w_bits for c in w_counts):
+            return bitserial_conv(xq.astype(jnp.int8), w_packed,
+                                  kernel=kernel, stride=stride,
+                                  w_bits=w_bits, rows_per_band=conv_tile,
+                                  interpret=self.interpret)
+        # Static weight-group trimming: the wgroup kernel's grid gains the
+        # serial weight-plane axis, gated per filter group by the
+        # pack-time scalar-prefetch counts. Ragged last group: pad N with
+        # zero columns (they fit any count), slice the result back.
+        n = w_packed.shape[-1]
+        npad = (-n) % w_group
+        wp = jnp.pad(w_packed, ((0, 0), (0, 0), (0, npad))) if npad \
+            else w_packed
+        y = bitserial_conv_wgroup(
+            xq.astype(jnp.int8), wp, jnp.asarray(w_counts, jnp.int32),
+            kernel=kernel, stride=stride, w_bits=w_bits, bn=w_group,
+            rows_per_band=conv_tile, interpret=self.interpret)
+        return y[..., :n] if npad else y
 
     def conv_planes_dynamic(self, xq, w_packed, counts, *, kernel, stride,
-                            w_bits, a_bits, group_size):
+                            w_bits, a_bits, group_size, w_counts=None,
+                            w_group=16):
         # Activations are the plane-serial operand here; weights ride as
         # dense int8 MXU passes. Pw > 8 splits into 7-bit int8-safe
         # subplanes whose shifted partials accumulate exactly (the same
         # decomposition as the dynamic linear path in kernels/ops.py).
+        # Composed static weight-group trimming truncates the dense
+        # operand per filter group at its pack-time width before the
+        # split — value-preserving for OR-tree counts (bit-identical
+        # composition), truncating-oracle semantics otherwise.
         from repro.core import bitpack, quantize as q
         wq = bitpack.unpack_weights(w_packed, w_bits)       # [K8, N] int32
+        if w_counts is not None:
+            wq = truncate_columns_grouped(wq, w_counts, w_group)
         if w_bits <= 8:
             w_planes, shifts = wq[None], jnp.ones((1,), jnp.int32)
         else:

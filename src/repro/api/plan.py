@@ -65,6 +65,16 @@ class LayerPlan:
     geometry (recorded in ``conv_tile_geom``; re-resolved if the
     geometry ever changes) and the backend's VMEM budget, never a
     hot-path kwarg.
+
+    ``w_group`` / ``w_group_counts`` are the static per-filter-group
+    weight-plane trimming metadata (the paper's Sec 4.6 groups of 16
+    filters): the OR-tree effective plane count per group of ``w_group``
+    output columns, computed ONCE at pack time
+    (:meth:`ExecutionPlan.record_weight_groups`) and frozen here as a
+    tuple of Python ints — static, so the XLA routes can partition
+    columns by count at trace time and the Pallas kernels take them as
+    scalar-prefetch constants. ``None`` = untrimmed (no pack-time
+    counts recorded).
     """
 
     name: str
@@ -78,6 +88,8 @@ class LayerPlan:
     conv_route: str = "fused"      # "fused" | "im2col"
     conv_tile: int | None = None   # rows per band; None = not yet resolved
     conv_tile_geom: tuple | None = None   # (h, w, c, n, w_bits) it fits
+    w_group: int = 16              # filter-group size for weight trimming
+    w_group_counts: tuple | None = None   # per-group plane counts (ints)
 
     @property
     def a_bits(self) -> int:
@@ -152,6 +164,52 @@ class ExecutionPlan:
             lp, conv_tile=rpb, conv_tile_geom=geom)
         return rpb
 
+    def record_weight_groups(self, named_params: dict) -> None:
+        """Freeze pack-time per-filter-group weight plane counts into plans.
+
+        ``named_params`` maps layer names to their PACKED param dicts
+        (``{"w_packed": uint8 [Pw, K/8, N], ...}``). For every resolved
+        layer with a matching packed tensor the OR-tree counts
+        (``core.weightgroups.weight_group_counts``) are computed ONCE,
+        eagerly, and stored as a tuple of Python ints on the LayerPlan —
+        the only place hot-path dispatch reads them from. Must be called
+        with concrete arrays (after real conversion, outside jit /
+        eval_shape); a no-op when ``policy.w_group`` is 0.
+        """
+        import numpy as np
+
+        from repro.core import bitpack, weightgroups
+        if not getattr(self.policy, "w_group", 0):
+            return
+        memo = {}   # (name, w_group) -> counts: conv layers also carry a
+        #             legacy im2col "linear" twin over the SAME tensor
+        for (name, kind), lp in list(self.layers.items()):
+            p = named_params.get(name)
+            if not isinstance(p, dict):
+                continue
+            wp = p.get("w_packed")
+            if wp is None or getattr(wp, "ndim", 0) != 3:
+                continue
+            counts = memo.get((name, lp.w_group))
+            if counts is None:
+                w_bits = wp.shape[0]
+                wq = bitpack.unpack_weights(wp, w_bits)
+                counts = tuple(int(v) for v in np.asarray(
+                    weightgroups.weight_group_counts(wq, w_bits,
+                                                     lp.w_group)))
+                memo[(name, lp.w_group)] = counts
+            self.set_weight_counts(name, kind, counts)
+
+    def set_weight_counts(self, name: str, kind: str, counts,
+                          w_group: int | None = None) -> LayerPlan:
+        """Attach per-filter-group plane counts to one resolved layer."""
+        lp = self.layers[(name, kind)]
+        lp = dataclasses.replace(
+            lp, w_group_counts=tuple(int(c) for c in counts),
+            w_group=lp.w_group if w_group is None else w_group)
+        self.layers[(name, kind)] = lp
+        return lp
+
     def _resolve(self, name, kind, kernel=None, stride=None) -> LayerPlan:
         try:
             route = MODE_ROUTES[self.mode]
@@ -163,6 +221,7 @@ class ExecutionPlan:
             precision=self.policy.lookup(name),
             dynamic_a=self.policy.dynamic_a,
             group_size=self.policy.group_size,
+            w_group=getattr(self.policy, "w_group", 16) or 16,
             kernel=kernel, stride=stride, conv_route=self.conv_route)
 
 

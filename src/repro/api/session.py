@@ -166,6 +166,10 @@ def compile(cfg, policy: Optional[PrecisionPolicy] = None,
         if mode in _SERVING_MODES:
             from repro.models.model import _convert_tree
             params, specs = _convert_tree(params, specs, policy, mode)
+            # Pack-time per-filter-group weight plane counts -> plan
+            # (CNN param keys ARE the layer names), before classify
+            # traces; the hot path only ever reads plan metadata.
+            plan.record_weight_groups(params)
         classify = jax.jit(lambda p, x: cnn.forward(p, cfg, x, plan))
         return ServingSession(cfg=cfg, plan=plan, params=params, specs=specs,
                               _classify=classify)
@@ -176,6 +180,10 @@ def compile(cfg, policy: Optional[PrecisionPolicy] = None,
     if mode in _SERVING_MODES:
         params, specs = M.convert_params_for_serving(params, specs, policy,
                                                      mode)
+        # LM blocks are stacked along the scan axis and share one plan
+        # per layer class, so per-layer static counts only apply to the
+        # unstacked head here.
+        plan.record_weight_groups({"lm_head": params.get("head", {})})
     cache_specs = M.cache_spec_tree(cfg) if mesh is not None else None
     prefill_j, decode_j = _jit_lm(cfg, plan, mesh, specs, cache_specs)
     return ServingSession(cfg=cfg, plan=plan, params=params, specs=specs,

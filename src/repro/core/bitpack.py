@@ -16,10 +16,13 @@ before writing ABout to AM) is `pack_planes` applied on the fly.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import quantize as q
+from repro.core import weightgroups as wg
 
 
 def pack_bits_along_axis(bits01: jax.Array, axis: int) -> jax.Array:
@@ -68,6 +71,45 @@ def pack_weights(wq: jax.Array, bits: int) -> jax.Array:
         wq = jnp.pad(wq, ((0, (-k) % 8), (0, 0)))
     planes = q.bit_planes(wq, bits)            # [bits, K8, N] in {0,1}
     return pack_bits_along_axis(planes, axis=1)  # [bits, K8//8, N]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedWeights:
+    """Packed planes + the pack-time per-filter-group precision metadata.
+
+    ``planes`` is exactly :func:`pack_weights`'s layout; ``counts`` is the
+    OR-tree effective plane count per group of ``group_size`` output
+    columns and ``plane_weights`` the per-group shift/negate table
+    (``weightgroups.group_plane_weights``) — the paper's Sec 4.6
+    per-group metadata in one bundle, for tooling that packs and
+    inspects in one step. The serving path arrives at the same counts
+    via ``ExecutionPlan.record_weight_groups`` (which reads them back
+    off already-packed param trees); both reduce to
+    ``weightgroups.weight_group_counts``, so they cannot drift.
+    """
+
+    planes: jax.Array        # uint8 [bits, ceil(K/8), N]
+    counts: jax.Array        # int32 [ceil(N/group_size)]
+    plane_weights: jax.Array  # int32 [ceil(N/group_size), bits]
+    group_size: int
+    bits: int
+
+
+def pack_weights_grouped(wq: jax.Array, bits: int,
+                         group_size: int = 16) -> GroupedWeights:
+    """:func:`pack_weights` plus the per-filter-group plane metadata.
+
+    Pure jax (eval_shape-safe); the plan-recording step
+    (``ExecutionPlan.record_weight_groups``) converts ``counts`` to
+    Python ints eagerly so the XLA route can partition columns at trace
+    time.
+    """
+    counts = wg.weight_group_counts(wq, bits, group_size)
+    return GroupedWeights(
+        planes=pack_weights(wq, bits),
+        counts=counts,
+        plane_weights=wg.group_plane_weights(counts, bits),
+        group_size=group_size, bits=bits)
 
 
 def unpack_weights(packed: jax.Array, bits: int, k: int | None = None) -> jax.Array:

@@ -165,8 +165,19 @@ def stripes_cycles(layer: Layer, pa: int) -> float:
 
 
 def lm_cycles(layer: Layer, pa: float, pw: float, a_plane_bits: int = 1,
-              dynamic_a: bool = True) -> float:
+              dynamic_a: bool = True, pw_groups: Sequence[float] | None = None
+              ) -> float:
     """Loom cycles for one layer.
+
+    ``pw_groups``: per-filter-group effective weight precisions (the
+    paper's Sec 4.6 groups of 16 filters; Table 3 reports their layer
+    means). When given they override ``pw`` with the group mean — the
+    serial weight-plane pass count of a SIP row/column is its own
+    group's count, groups are time-multiplexed over the array, so
+    expected cycles scale with E[count] over the groups (this is
+    exactly how the t3 profile of :func:`network_speedup` models
+    Table 4, now available at per-group resolution from
+    ``profiler.measure_weight_group_precision`` / pack-time counts).
 
     CVL: both operands serial. An LM_b design has 128 rows x 16/b columns
     of SIPs (paper Sec 3.2: LM_2b/4b need 8/4 SIP columns), each consuming
@@ -184,6 +195,12 @@ def lm_cycles(layer: Layer, pa: float, pw: float, a_plane_bits: int = 1,
     reduction is sliced across floor(2048/outputs) chained SIPs (split-K),
     plus Sn cycles to reduce the partials, plus the column-stagger fill.
     """
+    # `is not None` + len, not truthiness: counts arrive as jnp/np arrays
+    # from weight_group_counts / measure_weight_group_precision, whose
+    # bool() raises for more than one element.
+    if pw_groups is not None and len(pw_groups):
+        from repro.core.weightgroups import mean_group_bits
+        pw = mean_group_bits(pw_groups)
     if layer.kind == "cvl":
         if dynamic_a:
             exec_bits = pa * DYN_RATIO + (a_plane_bits - 1) / 2.0

@@ -24,12 +24,16 @@ class PrecisionPolicy:
     ``default`` applies to layers not explicitly listed. ``per_layer`` maps a
     layer name (or index as str) to its precision. ``dynamic_a`` enables the
     runtime per-group trimming; ``group_size`` is the paper's 256.
+    ``w_group`` is the static per-filter-group weight-plane trimming
+    granularity (the paper's Sec 4.6 groups of 16 filters; 0 disables
+    recording pack-time counts onto the plan).
     """
 
     default: LayerPrecision = LayerPrecision()
     per_layer: dict = dataclasses.field(default_factory=dict)
     dynamic_a: bool = False
     group_size: int = 256
+    w_group: int = 16
     a_plane_bits: int = 8
     w_plane_bits: int = 8
 
@@ -38,9 +42,10 @@ class PrecisionPolicy:
 
 
 def uniform_policy(a_bits: int, w_bits: int, *, plane_bits: int = 8,
-                   dynamic_a: bool = False) -> PrecisionPolicy:
+                   dynamic_a: bool = False,
+                   w_group: int = 16) -> PrecisionPolicy:
     return PrecisionPolicy(default=LayerPrecision(a_bits, w_bits),
-                           dynamic_a=dynamic_a,
+                           dynamic_a=dynamic_a, w_group=w_group,
                            a_plane_bits=plane_bits, w_plane_bits=plane_bits)
 
 

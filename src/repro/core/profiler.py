@@ -13,7 +13,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import dynamic, policy, quantize as q
+from repro.core import dynamic, policy, quantize as q, weightgroups
 
 
 def profile_layer_precisions(
@@ -49,6 +49,33 @@ def profile_layer_precisions(
                 break
         result[name] = ok
     return result
+
+
+def measure_weight_group_precision(w: jax.Array, static_bits: int,
+                                   group_size: int = 16) -> dict:
+    """Per-filter-group effective weight precision of one layer's weights.
+
+    The weight-side companion of :func:`measure_dynamic_precision`
+    (paper Sec 4.6 / Table 3): the layer's static Pw comes from the
+    Judd-style search (:func:`profile_layer_precisions` with
+    ``what="w_bits"``); this reports, on that profile grid, the OR-tree
+    minimum sufficient precision of each group of ``group_size`` output
+    columns (16 filters in the paper) — the same counts pack time
+    freezes into the execution plan, so the profile IS the execution
+    metadata. ``w``: float [K, N] (2-D matrix layout, k*k*Cin folded
+    into K for convs).
+    """
+    wq, _ = q.quantize(w.astype(jnp.float32), static_bits)
+    counts = weightgroups.weight_group_counts(wq, static_bits, group_size)
+    mean = float(jnp.mean(counts.astype(jnp.float32)))
+    return {
+        "mean_effective_bits": mean,
+        "static_bits": static_bits,
+        "plane_fraction_executed": mean / static_bits,
+        "group_size": group_size,
+        "n_groups": int(counts.shape[0]),
+        "per_group_bits": [int(c) for c in counts],
+    }
 
 
 def measure_dynamic_precision(x: jax.Array, static_bits: int,

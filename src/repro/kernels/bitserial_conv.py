@@ -44,6 +44,19 @@ large-resolution maps into a 16 MB VMEM. Band size is resolved once per
 layer by ``repro.api.plan`` from the backend's VMEM budget — it is not
 a hot-path kwarg.
 
+`bitserial_conv_wgroup` is the STATIC per-filter-group precision variant
+(the paper's Sec 4.6 / DPRed): the serial weight-plane loop moves from
+the kernel body onto the grid — (B, n_bands, N/bn, Pw), plane innermost
+— and a scalar-prefetch count per group of ``bn`` output filters
+(computed ONCE at pack time from the OR-tree over the group's weights,
+carried by ``LayerPlan.w_group_counts``) gates it with
+``pl.when(p < count)``: whole (plane x filter-group) grid steps are
+skipped, with the (count-1)-th plane negated (2's-complement truncation
+at the group's effective width — value-preserving for OR-tree counts, so
+the result is bit-identical to `bitserial_conv`). The band's patch
+matrix is assembled once per (band, filter-group) at plane 0 and reused
+from scratch across the plane steps.
+
 `bitserial_conv_dynamic` is the DYNAMIC-PRECISION transpose of the same
 design (Lascorz et al., the paper's runtime trimming): the serial axis
 becomes the ACTIVATION planes, weights ride as one dense int8 operand,
@@ -224,6 +237,117 @@ def bitserial_conv(x: jax.Array, w_packed: jax.Array, *, kernel: int,
         out_shape=jax.ShapeDtypeStruct((b, nb, rpb, wo, n), jnp.int32),
         interpret=interpret,
     )(xb, w_packed)
+    return out.reshape(b, nb * rpb, wo, n)[:, :ho]
+
+
+def _kernel_wg(counts_ref, x_ref, wp_ref, out_ref, patch_ref, acc_ref, *,
+               kernel: int, stride: int, w_bits: int, rows: int, wo: int,
+               kpad: int):
+    """Grid = (B, n_bands, N/bn, Pw): serial WEIGHT-plane axis innermost.
+
+    counts_ref (scalar prefetch) holds the pack-time effective weight
+    precision per filter group (= per N-tile of ``bn`` columns — the
+    paper's Sec 4.6 per-group metadata). Plane grid steps with
+    p >= count are skipped entirely via pl.when — no patch matmul, and
+    on TPU no HBM fetch of that plane's tile — with the (count-1)-th
+    plane negated (2's complement at the group's effective width). The
+    band's patch rows are assembled once at plane 0 (counts have a 1-bit
+    floor, so plane 0 always executes) and reused from scratch."""
+    l = pl.program_id(2)
+    p = pl.program_id(3)
+
+    # The band's patch matrix depends only on (batch, band): assemble it
+    # once at the FIRST filter group and reuse the scratch across all
+    # N/bn groups — at bn = w_group (16) a per-group prologue would redo
+    # the implicit im2col N/16 times per band.
+    @pl.when((l == 0) & (p == 0))
+    def _patches_init():
+        patches = _patches(x_ref[0, 0], kernel, stride, rows, wo)
+        if kpad:
+            patches = jnp.pad(patches, ((0, 0), (0, kpad)))
+        patch_ref[...] = patches
+
+    @pl.when(p == 0)
+    def _acc_init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    count = counts_ref[l]
+
+    @pl.when(p < count)
+    def _work():
+        plane = _unpack_planes(wp_ref[...])[0]      # [K8*8, bn] {0,1} int8
+        part = jax.lax.dot_general(
+            patch_ref[...], plane,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)       # int8 x {0,1} MXU pass
+        sign = jnp.where(p == count - 1, -1, 1)     # MSB at effective width
+        acc_ref[...] += part * (sign * (jnp.int32(1) << p))
+
+    @pl.when(p == w_bits - 1)
+    def _done():
+        out_ref[0, 0] = acc_ref[...].reshape(rows, wo, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "w_bits",
+                                             "bn", "rows_per_band",
+                                             "interpret"))
+def bitserial_conv_wgroup(x: jax.Array, w_packed: jax.Array,
+                          counts: jax.Array, *, kernel: int, stride: int = 1,
+                          w_bits: int, bn: int = 16,
+                          rows_per_band: int | None = None,
+                          interpret: bool = True) -> jax.Array:
+    """Fused bit-serial conv with STATIC per-filter-group plane skipping.
+
+    x: int8 [B, H, W, C]; w_packed: uint8 [Pw, ceil(k*k*C/8), N]; counts:
+    int32 [N/bn] — the pack-time OR-tree effective weight precision of
+    each group of ``bn`` output filters (``LayerPlan.w_group_counts``;
+    callers pad N to a multiple of ``bn`` — zero columns fit any count).
+    Filter group l executes only counts[l] of the ``w_bits`` serial
+    weight planes. Returns int32 [B, Ho, Wo, N] ("same" geometry),
+    bit-identical to :func:`bitserial_conv` whenever every group's
+    weights fit in its count (the OR-tree guarantee); for arbitrary
+    counts it matches the truncating oracle
+    ``ref.bitserial_conv_wgroup_ref``. ``rows_per_band`` bands the grid
+    over output rows exactly as in the static kernel.
+    """
+    assert kernel % 2 == 1, f"odd kernels only, got {kernel}"
+    b, h, w, c = x.shape
+    pw, k8, n = w_packed.shape
+    kkc = kernel * kernel * c
+    assert pw == w_bits and k8 == -(-kkc // 8), (w_packed.shape, kkc, w_bits)
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+    assert counts.shape == (n // bn,), (counts.shape, n, bn)
+
+    pad = kernel // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    wp_ = w + 2 * pad
+    ho = -(-h // stride)
+    wo = -(-w // stride)
+    rpb, nb, band_rows = band_geometry(ho, wo, rows_per_band, kernel, stride)
+    xb = _banded(xp, np.arange(nb) * rpb * stride, band_rows)
+
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nb, n // bn, w_bits),
+        in_specs=[
+            pl.BlockSpec((1, 1, band_rows, wp_, c),
+                         lambda i, j, l, p, counts: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, k8, bn), lambda i, j, l, p, counts: (p, 0, l)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rpb, wo, bn),
+                               lambda i, j, l, p, counts: (i, j, 0, 0, l)),
+        scratch_shapes=[pltpu.VMEM((rpb * wo, k8 * 8), jnp.int8),
+                        pltpu.VMEM((rpb * wo, bn), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_wg, kernel=kernel, stride=stride,
+                          w_bits=w_bits, rows=rpb, wo=wo,
+                          kpad=k8 * 8 - kkc),
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((b, nb, rpb, wo, n), jnp.int32),
+        interpret=interpret,
+    )(counts.astype(jnp.int32), xb, w_packed)
     return out.reshape(b, nb * rpb, wo, n)[:, :ho]
 
 

@@ -16,6 +16,12 @@ This is the SIP array adapted to the TPU memory hierarchy:
     lets the kernel skip planes above the runtime effective precision
     (Lascorz et al.) — blocks with plane >= count are masked via pl.when
     so no MXU work (and on TPU no HBM fetch of that plane's tile) happens.
+    The SAME kernel doubles as the STATIC per-filter-group weight
+    trimming path (paper Sec 4.6): when the packed operand is the
+    weights, the backend feeds the pack-time OR-tree counts from
+    ``LayerPlan.w_group_counts`` with bn = the filter-group size —
+    per-group weight precisions are known at pack time, so no runtime
+    detection is needed and the counts are plan constants.
 
 Activations are int8 (Pa <= 8 after quantization). This realizes the
 paper's FCL law (work, bytes ∝ Pw) and, combined with 4-bit activation

@@ -16,16 +16,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.backend import resolve_backend
-from repro.core import bitpack, dynamic, quantize as q
+from repro.core import bitpack, dynamic, quantize as q, weightgroups
 from repro.kernels import ref
 
 
 def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
-                      *, a_bits: int, w_bits: int, backend=None) -> jax.Array:
+                      *, a_bits: int, w_bits: int, backend=None,
+                      w_counts=None, w_group: int = 16) -> jax.Array:
     """Serving-path linear: activations dynamically quantized to a_bits,
     weights pre-packed bit-serially. Output in x.dtype.
 
     x: [..., K]; w_packed: uint8 [Pw, K//8, N]; w_scale: per-tensor f32.
+    ``w_counts``/``w_group``: pack-time per-filter-group weight plane
+    counts (``LayerPlan.w_group_counts`` — Python ints, never recomputed
+    here); the backend then executes only each group's effective planes,
+    bit-identically to the untrimmed path.
     """
     be = resolve_backend(backend)
     lead = x.shape[:-1]
@@ -38,7 +43,13 @@ def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
         x2 = jnp.pad(x2, ((0, 0), (0, k8 - k)))
     a_bits = min(a_bits, 8)  # int8 kernel ABI; Pa>8 would wrap in astype
     xq, x_scale = q.quantize(x2, a_bits)
-    y = be.matmul_planes(xq.astype(jnp.int8), w_packed, w_bits=w_bits)
+    # Trimming kwargs only travel when counts exist: out-of-tree Backend
+    # subclasses overriding the pre-trimming signatures keep working on
+    # the untrimmed path.
+    trim = {} if w_counts is None else dict(a_bits=a_bits, w_counts=w_counts,
+                                            w_group=w_group)
+    y = be.matmul_planes(xq.astype(jnp.int8), w_packed, w_bits=w_bits,
+                         **trim)
     # Single cast at the end: the int32 accumulate is scaled in f32 and
     # dropped straight to x.dtype (bf16 in, bf16 out — no double round).
     out = (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
@@ -52,7 +63,8 @@ def _round_up(v: int, m: int) -> int:
 def loom_linear_serve_dynamic(x: jax.Array, w_packed: jax.Array,
                               w_scale: jax.Array, *, a_bits: int,
                               w_bits: int, group_size: int = 256,
-                              backend=None) -> jax.Array:
+                              backend=None, w_counts=None,
+                              w_group: int = 16) -> jax.Array:
     """Dynamic-precision serving linear: runtime activation-plane trimming.
 
     Loom's Lascorz-style path: activations are quantized on the SAME
@@ -73,6 +85,13 @@ def loom_linear_serve_dynamic(x: jax.Array, w_packed: jax.Array,
     (``bitserial_matmul_dynamic``), which skips whole planes per group.
     Weights ride int8 MXU passes; Pw > 8 splits them into int8-safe
     subplanes whose shifted partials accumulate exactly.
+
+    ``w_counts``/``w_group`` compose static per-filter-group weight
+    trimming in: the dense weight operand is truncated per group of
+    output columns at its pack-time effective width (value-preserving
+    for OR-tree counts, so the composition stays bit-identical to the
+    static path); the modeled pass count becomes
+    mean_Pa_eff x mean_Pw_eff over the group intersections.
     """
     be = resolve_backend(backend)
     lead = x.shape[:-1]
@@ -93,6 +112,8 @@ def loom_linear_serve_dynamic(x: jax.Array, w_packed: jax.Array,
     counts = dynamic.serve_group_counts(xq, g, a_bits)          # [mp/g]
     x_packed = bitpack.pack_weights(xq.T, a_bits)  # [Pa, k8/8, mp]
     wq = bitpack.unpack_weights(w_packed, w_bits)               # [k8, N]
+    if w_counts is not None:
+        wq = weightgroups.truncate_columns_grouped(wq, w_counts, w_group)
     if w_bits <= 8:
         w_planes, shifts = wq[None], jnp.ones((1,), jnp.int32)
     else:
@@ -117,8 +138,16 @@ def conv_accum_fits_f32(kkc: int, a_bits: int, w_bits: int) -> bool:
     return kkc << (a_bits - 1 + w_bits - 1) <= 1 << 24
 
 
+# Stems with C <= this fold their k*k window offsets into the channel
+# dim (one GEMM over K = k*k*C) instead of walking k*k tiny-K passes:
+# below ~64 reduction elements per pass the XLA:CPU GEMM is launch-
+# overhead-bound and the k*k walk loses to a single wider matmul.
+STEM_FOLD_MAX_C = 4
+
+
 def int_conv_same(x_int: jax.Array, w4: jax.Array, stride: int,
-                  exact_f32: bool = False) -> jax.Array:
+                  exact_f32: bool = False,
+                  fold_kk: bool | None = None) -> jax.Array:
     """Integer "same"-padded conv as k*k shift-and-matmul passes.
 
     x_int: int [B, H, W, C]; w4: int [k, k, C, N] -> exact int32
@@ -133,6 +162,14 @@ def int_conv_same(x_int: jax.Array, w4: jax.Array, stride: int,
     ``exact_f32``: run the passes in float32 — callers must guarantee
     conv_accum_fits_f32, which makes the result bit-identical while
     hitting the (much faster on CPU) f32 GEMM; small-K stems gain ~4x.
+
+    ``fold_kk``: fold the k*k window offsets into the channel dim and run
+    ONE GEMM over K = k*k*C instead of k*k passes of K = C. Default
+    (None) folds small-C stems (C <= ``STEM_FOLD_MAX_C``, e.g. a 3x3 RGB
+    conv1: 9 GEMMs of K=3 -> 1 GEMM of K=27) where the walk is
+    GEMM-overhead-bound; bit-identical either way (same products, and
+    under ``exact_f32`` every partial sum is mantissa-exact regardless
+    of summation order).
     """
     k, _, c, n = w4.shape
     pad = k // 2
@@ -141,9 +178,19 @@ def int_conv_same(x_int: jax.Array, w4: jax.Array, stride: int,
     dt = jnp.float32 if exact_f32 else jnp.int32
     xp = jnp.pad(x_int.astype(dt),
                  ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    if fold_kk is None:
+        fold_kk = c <= STEM_FOLD_MAX_C
+    slices = ref.conv_window_slices(xp, k, stride, ho, wo)
+    if fold_kk:
+        patches = jnp.concatenate(slices, axis=-1)      # [B, Ho, Wo, kkC]
+        acc = jax.lax.dot_general(
+            patches, w4.astype(dt).reshape(k * k * c, n),
+            dimension_numbers=(((3,), (0,)), ((), ())),
+            preferred_element_type=dt)
+        return acc.astype(jnp.int32)
     wc = w4.astype(dt).reshape(k * k, c, n)
     acc = jnp.zeros((b, ho, wo, n), dt)
-    for sl, wslab in zip(ref.conv_window_slices(xp, k, stride, ho, wo), wc):
+    for sl, wslab in zip(slices, wc):
         acc = acc + jax.lax.dot_general(
             sl, wslab,
             dimension_numbers=(((3,), (0,)), ((), ())),
@@ -153,7 +200,8 @@ def int_conv_same(x_int: jax.Array, w4: jax.Array, stride: int,
 
 def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
                     *, kernel: int, stride: int, a_bits: int, backend=None,
-                    conv_tile: int | None = None) -> jax.Array:
+                    conv_tile: int | None = None, w_counts=None,
+                    w_group: int = 16) -> jax.Array:
     """Serving-path fused conv: the CVL execution path.
 
     x: [B, H, W, C] float; w_packed: uint8 [Pw, ceil(k*k*C/8), N] in the
@@ -161,7 +209,9 @@ def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
     dynamically quantized to a_bits; the conv runs integer-exact over the
     packed planes (banded Pallas kernel on the pallas backends, one XLA integer
     conv otherwise — neither materializes an im2col patch tensor in HBM).
-    Output in x.dtype.
+    Output in x.dtype. ``w_counts``/``w_group``: pack-time per-filter-group
+    weight plane counts from the plan — each filter group then executes
+    only its effective planes, bit-identically to the untrimmed path.
     """
     be = resolve_backend(backend)
     w_bits = w_packed.shape[0]
@@ -170,15 +220,19 @@ def loom_conv_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
     # astype below would wrap Pa>8 values modulo 256.
     a_bits = min(a_bits, 8)
     xq, x_scale = q.quantize(x.astype(jnp.float32), a_bits)
+    trim = {} if w_counts is None else dict(w_counts=w_counts,
+                                            w_group=w_group)
     y = be.conv_planes(xq, w_packed, kernel=kernel, stride=stride,
-                       w_bits=w_bits, a_bits=a_bits, conv_tile=conv_tile)
+                       w_bits=w_bits, a_bits=a_bits, conv_tile=conv_tile,
+                       **trim)
     return (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
 
 
 def loom_conv_serve_dynamic(x: jax.Array, w_packed: jax.Array,
                             w_scale: jax.Array, *, kernel: int, stride: int,
                             a_bits: int, group_size: int = 256,
-                            backend=None) -> jax.Array:
+                            backend=None, w_counts=None,
+                            w_group: int = 16) -> jax.Array:
     """Dynamic-precision serving conv: runtime activation-plane trimming.
 
     The CVL analogue of :func:`loom_linear_serve_dynamic`: activations are
@@ -191,6 +245,12 @@ def loom_conv_serve_dynamic(x: jax.Array, w_packed: jax.Array,
     effective width is value-preserving, so the result is bit-identical
     to :func:`loom_conv_serve`. Tiny output maps clamp the group to one
     8-window-aligned group rather than padding 256x.
+
+    ``w_counts``/``w_group`` compose static per-filter-group weight
+    trimming in (pack-time counts from the plan): the backend truncates
+    each filter group's weights at its effective width — bit-identical
+    composition for OR-tree counts, modeled passes
+    mean_Pa_eff x mean_Pw_eff.
     """
     be = resolve_backend(backend)
     w_bits = w_packed.shape[0]
@@ -201,9 +261,11 @@ def loom_conv_serve_dynamic(x: jax.Array, w_packed: jax.Array,
     gsz = min(group_size, _round_up(nwin, 8))
     counts = dynamic.conv_window_group_counts(xq, kernel, stride, gsz,
                                               a_bits)
+    trim = {} if w_counts is None else dict(w_counts=w_counts,
+                                            w_group=w_group)
     y = be.conv_planes_dynamic(xq, w_packed, counts, kernel=kernel,
                                stride=stride, w_bits=w_bits, a_bits=a_bits,
-                               group_size=gsz)
+                               group_size=gsz, **trim)
     return (y * (x_scale * w_scale).astype(jnp.float32)).astype(x.dtype)
 
 

@@ -33,6 +33,29 @@ def bitserial_matmul_dynamic_ref(x: jax.Array, w_packed: jax.Array,
     return jnp.matmul(x.astype(jnp.int32), w_eff, preferred_element_type=jnp.int32)
 
 
+def _wgroup_truncate(wq: jax.Array, counts: jax.Array,
+                     w_group: int) -> jax.Array:
+    """Per-column-group truncation — the canonical implementation lives
+    in :func:`repro.core.weightgroups.truncate_columns_grouped`; kept as
+    a local alias so the oracles read in this module's vocabulary."""
+    from repro.core.weightgroups import truncate_columns_grouped
+    return truncate_columns_grouped(wq, counts, w_group)
+
+
+def bitserial_matmul_wgroup_ref(x: jax.Array, w_packed: jax.Array,
+                                counts: jax.Array, w_bits: int,
+                                w_group: int) -> jax.Array:
+    """Truncating oracle for STATIC per-filter-group weight-plane skipping
+    on the linear path: column group g uses only its first counts[g]
+    planes with the (count-1)-th negated (2's complement at the group's
+    effective width). Unlike :func:`bitserial_matmul_dynamic_ref` (the
+    same semantics, per N-tile of the kernel grid) this tolerates a
+    ragged last group, matching the pack-time metadata layout."""
+    wq = bitpack.unpack_weights(w_packed, w_bits)
+    return jnp.matmul(x.astype(jnp.int32), _wgroup_truncate(wq, counts, w_group),
+                      preferred_element_type=jnp.int32)
+
+
 def conv_window_slices(xp: jax.Array, kernel: int, stride: int, ho: int,
                        wo: int) -> list:
     """The k*k window-offset strided slices of a PADDED NHWC map.
@@ -109,6 +132,31 @@ def bitserial_conv_banded_ref(x: jax.Array, w_packed: jax.Array, *,
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
             preferred_element_type=jnp.int32))
     return jnp.concatenate(bands, axis=1)
+
+
+def bitserial_conv_wgroup_ref(x: jax.Array, w_packed: jax.Array,
+                              counts: jax.Array, *, kernel: int,
+                              stride: int = 1, w_bits: int,
+                              w_group: int = 16) -> jax.Array:
+    """Truncating oracle for STATIC per-filter-group weight-plane skipping
+    on the conv path: filter group g (``w_group`` output channels, ragged
+    tail allowed) uses only its first counts[g] weight planes with the
+    (count-1)-th negated. For pack-time OR-tree counts this equals
+    :func:`bitserial_conv_ref` bit for bit (2's-complement truncation at
+    >= the effective width is value-preserving); for arbitrary counts it
+    pins the semantics the production routes realize without
+    materializing per-plane weight tensors."""
+    c = x.shape[-1]
+    kkc = kernel * kernel * c
+    wq = bitpack.unpack_weights(w_packed, w_bits, k=kkc)   # int32 [kkC, N]
+    w_eff = _wgroup_truncate(wq, counts, w_group)
+    pad = kernel // 2
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w_eff.reshape(kernel, kernel, c, -1),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
 
 
 def bitserial_conv_dynamic_ref(x: jax.Array, w_packed: jax.Array,

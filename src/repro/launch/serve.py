@@ -74,6 +74,8 @@ def _generate_plan(cfg, args, policy):
               f"(Pw={args.w_bits}: weight bytes x{args.w_bits}/16 of bf16)")
     plan = planlib.build_plan(cfg, policy, mode=args.mode,
                               backend=args.backend)
+    if args.mode != "dense":
+        plan.record_weight_groups({"lm_head": params.get("head", {})})
     prefill_fn, decode_fn = make_serve_fns(cfg, plan)
     prefill_fn = jax.jit(prefill_fn)
     decode_fn = jax.jit(decode_fn, donate_argnums=(3,))
@@ -128,6 +130,8 @@ def _classify_plan(cfg, args, policy):
                                                      args.mode)
     plan = planlib.build_plan(cfg, policy, mode=args.mode,
                               backend=args.backend)
+    if args.mode != "dense":
+        plan.record_weight_groups(params)
     logits = jax.jit(lambda p, x: cnn.forward(p, cfg, x, plan))(
         params, _cnn_inputs(cfg, args))
     return np.argmax(np.asarray(logits), axis=-1)

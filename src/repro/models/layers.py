@@ -119,14 +119,19 @@ def _linear_packed(p, x, lp, be):
     # precision is intrinsic to the packed tensor (its plane dim) — the
     # plan only sets the activation precision. ``dynamic_a`` routes
     # through the runtime activation-plane-trimming kernel.
+    # ``lp.w_group_counts`` (pack-time per-filter-group weight plane
+    # counts, recorded ONCE by ExecutionPlan.record_weight_groups) makes
+    # both routes execute only each filter group's effective weight
+    # planes — bit-identical to the untrimmed path.
     if lp.dynamic_a:
         return ops.loom_linear_serve_dynamic(
             x, p["w_packed"], p["w_scale"], a_bits=lp.a_bits,
             w_bits=p["w_packed"].shape[0], group_size=lp.group_size,
-            backend=be)
+            backend=be, w_counts=lp.w_group_counts, w_group=lp.w_group)
     return ops.loom_linear_serve(
         x, p["w_packed"], p["w_scale"], a_bits=lp.a_bits,
-        w_bits=p["w_packed"].shape[0], backend=be)
+        w_bits=p["w_packed"].shape[0], backend=be,
+        w_counts=lp.w_group_counts, w_group=lp.w_group)
 
 
 _LINEAR_ROUTES = {
@@ -193,12 +198,14 @@ def _conv_packed(p, x, kernel, stride, lp, xplan):
         return ops.loom_conv_serve_dynamic(
             x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
             a_bits=lp.a_bits, group_size=lp.group_size,
-            backend=xplan.backend)
+            backend=xplan.backend, w_counts=lp.w_group_counts,
+            w_group=lp.w_group)
     tile = xplan.conv_tile(lp, x.shape[1], x.shape[2], x.shape[3],
                            p["w_packed"].shape[-1], p["w_packed"].shape[0])
     return ops.loom_conv_serve(
         x, p["w_packed"], p["w_scale"], kernel=kernel, stride=stride,
-        a_bits=lp.a_bits, backend=xplan.backend, conv_tile=tile)
+        a_bits=lp.a_bits, backend=xplan.backend, conv_tile=tile,
+        w_counts=lp.w_group_counts, w_group=lp.w_group)
 
 
 _CONV_ROUTES = {

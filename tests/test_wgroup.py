@@ -1,0 +1,430 @@
+"""Static per-filter-group weight-plane trimming (sub-layer Pw, Sec 4.6).
+
+Pack-time OR-tree counts per group of ``w_group`` output columns gate the
+serial weight planes on every backend: XLA partitions columns by count at
+trace time (the counts are plan-carried Python ints), the Pallas kernels
+skip whole (plane x filter-group) grid steps via scalar prefetch. The
+contract pinned here:
+
+  * OR-tree counts are VALUE-PRESERVING: trimmed == untrimmed static,
+    bit for bit, across (Pa, Pw) x kernel x stride x backend, ragged
+    last column groups and all-zero groups (1-plane floor) included;
+  * arbitrary (forced-low) counts match the truncating oracles
+    ``ref.bitserial_matmul_wgroup_ref`` / ``ref.bitserial_conv_wgroup_ref``
+    on every backend;
+  * trimming composes with dynamic activation trimming (``dynamic_a``)
+    bit-identically, and with the row-banded conv grid;
+  * counts are computed ONCE at pack time and flow only through
+    plan/pack metadata — no hot-path callsite recomputes them (grep
+    invariant);
+  * the small-C stem fold (k*k window offsets folded into the channel
+    dim) is bit-identical to the walk on the XLA conv route.
+"""
+import os
+import re
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import session as loom
+from repro.api.backend import get_backend, _wgroup_partitions
+from repro.api.plan import build_plan
+from repro.core import bitpack, cyclemodel, profiler, quantize as q
+from repro.core import weightgroups as wg
+from repro.core.policy import uniform_policy
+from repro.kernels import ops, ref
+from repro.kernels.bitserial_conv import bitserial_conv_wgroup
+
+PRECISIONS = ((8, 8), (4, 4), (8, 11))
+BACKENDS = ("xla", "pallas_interpret")
+
+
+def _skewed(rng, k, n, quiet=slice(None, None)):
+    """f32 weights whose ``quiet`` column slice is scaled far below the
+    per-tensor absmax, so those filter groups quantize to fewer planes."""
+    wf = rng.normal(size=(k, n)).astype(np.float32)
+    wf[:, quiet] *= 0.04
+    return jnp.asarray(wf)
+
+
+def _pack(wf, pw, w_group=16):
+    wq, ws = q.quantize(wf, pw)
+    counts = tuple(int(c) for c in
+                   np.asarray(wg.weight_group_counts(wq, pw, w_group)))
+    return bitpack.pack_weights(wq, pw), ws, counts
+
+
+# ---------------------------------------------------------------------------
+# Metadata units
+# ---------------------------------------------------------------------------
+
+def test_weight_group_counts_constructed():
+    # columns: [loud(127) x4 | 4-bit(7) x4 | zero x2(ragged tail)]
+    wq = np.zeros((8, 10), np.int32)
+    wq[:, :4] = 127
+    wq[0, 4:8] = 7
+    counts = np.asarray(wg.weight_group_counts(jnp.asarray(wq), 8, 4))
+    assert counts.tolist() == [8, 4, 1]   # zero tail group: 1-bit floor
+
+
+def test_weight_group_counts_clamped_to_bits():
+    wq = jnp.full((4, 4), -128, jnp.int32)   # qmin: detector reports 9
+    counts = np.asarray(wg.weight_group_counts(wq, 8, 4))
+    assert counts.tolist() == [8]
+
+
+def test_group_plane_weights_shift_metadata():
+    pwts = np.asarray(wg.group_plane_weights((3, 1, 8), 8))
+    assert pwts.shape == (3, 8)
+    assert pwts[0].tolist() == [1, 2, -4, 0, 0, 0, 0, 0]
+    assert pwts[1].tolist() == [-1, 0, 0, 0, 0, 0, 0, 0]
+    assert pwts[2].tolist() == [1, 2, 4, 8, 16, 32, 64, -128]
+    # Reconstruction law: sum_p pwts[g, p] * bit_p == truncation at count.
+    v = jnp.arange(-8, 8, dtype=jnp.int32)
+    bits = np.asarray(q.bit_planes(v, 8)).astype(np.int64)
+    rec = (pwts[0][:, None] * bits).sum(axis=0)
+    exp = np.asarray(wg.truncate_signed(v, jnp.full_like(v, 3)))
+    np.testing.assert_array_equal(rec, exp)
+
+
+def test_grouped_packed_nbytes_law():
+    counts = (8, 4, 1)
+    got = wg.grouped_packed_nbytes((27, 40), counts, 16)
+    k8rows = 4                       # ceil(27/8)
+    assert got == 8 * k8rows * 16 + 4 * k8rows * 16 + 1 * k8rows * 8
+    assert got < bitpack.packed_nbytes((27, 40), 8)
+
+
+def test_pack_weights_grouped_round_trip():
+    rng = np.random.default_rng(0)
+    wf = _skewed(rng, 24, 40, quiet=slice(16, 32))
+    wq, _ = q.quantize(wf, 8)
+    g = bitpack.pack_weights_grouped(wq, 8, 16)
+    np.testing.assert_array_equal(np.asarray(g.planes),
+                                  np.asarray(bitpack.pack_weights(wq, 8)))
+    # Counts recomputed from the packed planes match the metadata.
+    np.testing.assert_array_equal(
+        np.asarray(g.counts),
+        np.asarray(wg.weight_group_counts(
+            bitpack.unpack_weights(g.planes, 8), 8, 16)))
+    np.testing.assert_array_equal(
+        np.asarray(g.plane_weights),
+        np.asarray(wg.group_plane_weights(g.counts, 8)))
+    assert (g.group_size, g.bits) == (16, 8)
+
+
+def test_wgroup_partitions_and_inverse_perm():
+    parts, inv = _wgroup_partitions((8, 4, 8, 4, 2), 16, 72)  # ragged tail
+    cover = np.concatenate([cols for _, cols in parts])
+    assert sorted(cover.tolist()) == list(range(72))
+    np.testing.assert_array_equal(cover[inv], np.arange(72))
+    by_count = dict((c, len(cols)) for c, cols in parts)
+    assert by_count == {8: 32, 4: 32, 2: 8}
+
+
+# ---------------------------------------------------------------------------
+# Linear path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pa,pw", PRECISIONS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_linear_trimmed_bit_identical(pa, pw, backend):
+    rng = np.random.default_rng(1)
+    m, k, n = 12, 40, 48
+    wf = _skewed(rng, k, n, quiet=slice(n // 2, None))
+    w_packed, ws, counts = _pack(wf, pw)
+    assert min(counts) < pw          # the trim is real, not vacuous
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    base = ops.loom_linear_serve(x, w_packed, ws, a_bits=pa, w_bits=pw,
+                                 backend="xla")
+    out = ops.loom_linear_serve(x, w_packed, ws, a_bits=pa, w_bits=pw,
+                                backend=backend, w_counts=counts, w_group=16)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n", (32, 40))     # divisible + ragged last group
+def test_linear_forced_low_counts_match_oracle(backend, n):
+    rng = np.random.default_rng(2)
+    m, k, pw = 8, 24, 8
+    wf = jnp.asarray(rng.normal(size=(k, n)), np.float32)
+    wq, _ = q.quantize(wf, pw)
+    w_packed = bitpack.pack_weights(wq, pw)
+    xq = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    forced = tuple([3, 5, 1][:-(-n // 16)])
+    want = ref.bitserial_matmul_wgroup_ref(xq, w_packed,
+                                           jnp.asarray(forced), pw, 16)
+    got = get_backend(backend).matmul_planes(xq, w_packed, w_bits=pw,
+                                             a_bits=8, w_counts=forced,
+                                             w_group=16)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_linear_compose_dynamic_a_bit_identical(backend):
+    rng = np.random.default_rng(3)
+    m, k, n, pa, pw = 24, 40, 48, 8, 8
+    wf = _skewed(rng, k, n, quiet=slice(0, 16))
+    w_packed, ws, counts = _pack(wf, pw)
+    xr = rng.normal(size=(m, k)).astype(np.float32)
+    xr[m // 2:] *= 0.02              # quiet row groups: dynamic_a trims too
+    x = jnp.asarray(xr)
+    base = ops.loom_linear_serve(x, w_packed, ws, a_bits=pa, w_bits=pw,
+                                 backend="xla")
+    out = ops.loom_linear_serve_dynamic(
+        x, w_packed, ws, a_bits=pa, w_bits=pw, group_size=8,
+        backend=backend, w_counts=counts, w_group=16)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+# ---------------------------------------------------------------------------
+# Conv path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pa,pw", PRECISIONS)
+@pytest.mark.parametrize("kernel", (1, 3, 5))
+@pytest.mark.parametrize("stride", (1, 2))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conv_trimmed_bit_identical(pa, pw, kernel, stride, backend):
+    rng = np.random.default_rng(4)
+    b, h, c, n = 2, 6, 3, 24
+    wf = _skewed(rng, kernel * kernel * c, n, quiet=slice(n // 2, None))
+    w_packed, ws, counts = _pack(wf, pw)
+    assert min(counts) < pw
+    x = jnp.asarray(rng.normal(size=(b, h, h, c)), jnp.float32)
+    base = ops.loom_conv_serve(x, w_packed, ws, kernel=kernel, stride=stride,
+                               a_bits=pa, backend="xla")
+    out = ops.loom_conv_serve(x, w_packed, ws, kernel=kernel, stride=stride,
+                              a_bits=pa, backend=backend, w_counts=counts,
+                              w_group=16)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+@pytest.mark.parametrize("kernel", (1, 3, 5))
+@pytest.mark.parametrize("stride", (1, 2))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conv_forced_low_counts_match_oracle(kernel, stride, backend):
+    rng = np.random.default_rng(5)
+    b, h, c, n, pa, pw = 2, 6, 2, 32, 8, 8
+    wf = jnp.asarray(rng.normal(size=(kernel * kernel * c, n)), np.float32)
+    wq, _ = q.quantize(wf, pw)
+    w_packed = bitpack.pack_weights(wq, pw)
+    xq = jnp.asarray(rng.integers(-(1 << (pa - 1)), 1 << (pa - 1),
+                                  size=(b, h, h, c)), jnp.int8)
+    forced = (4, 2)
+    want = ref.bitserial_conv_wgroup_ref(
+        xq.astype(jnp.int32), w_packed, jnp.asarray(forced), kernel=kernel,
+        stride=stride, w_bits=pw, w_group=16)
+    got = get_backend(backend).conv_planes(
+        xq, w_packed, kernel=kernel, stride=stride, w_bits=pw, a_bits=pa,
+        w_counts=forced, w_group=16)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conv_ragged_and_all_zero_group(backend):
+    rng = np.random.default_rng(6)
+    b, h, c, n, pa, pw = 2, 8, 3, 40, 8, 8   # groups of 16: 16/16/8 ragged
+    wf = np.array(_skewed(rng, 9 * c, n, quiet=slice(16, 32)))
+    wf[:, 32:] = 0.0                          # all-zero ragged tail group
+    w_packed, ws, counts = _pack(jnp.asarray(wf), pw)
+    assert len(counts) == 3 and counts[2] == 1   # 1-plane floor
+    x = jnp.asarray(rng.normal(size=(b, h, h, c)), jnp.float32)
+    base = ops.loom_conv_serve(x, w_packed, ws, kernel=3, stride=1,
+                               a_bits=pa, backend="xla")
+    out = ops.loom_conv_serve(x, w_packed, ws, kernel=3, stride=1,
+                              a_bits=pa, backend=backend, w_counts=counts,
+                              w_group=16)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+    assert not np.asarray(out)[..., 32:].any()   # zero filters stay zero
+
+
+@pytest.mark.parametrize("rows_per_band", (1, 3, None))
+def test_conv_wgroup_banded_interaction(rows_per_band):
+    rng = np.random.default_rng(7)
+    b, h, c, n, pa, pw = 2, 8, 3, 32, 8, 8
+    wf = _skewed(rng, 9 * c, n, quiet=slice(16, None))
+    wq, _ = q.quantize(wf, pw)
+    w_packed = bitpack.pack_weights(wq, pw)
+    counts = wg.weight_group_counts(wq, pw, 16)
+    xq = jnp.asarray(rng.integers(-(1 << (pa - 1)), 1 << (pa - 1),
+                                  size=(b, h, h, c)), jnp.int8)
+    want = ref.bitserial_conv_wgroup_ref(
+        xq.astype(jnp.int32), w_packed, counts, kernel=3, stride=1,
+        w_bits=pw, w_group=16)
+    got = bitserial_conv_wgroup(xq, w_packed, counts, kernel=3, stride=1,
+                                w_bits=pw, bn=16,
+                                rows_per_band=rows_per_band, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conv_compose_dynamic_a_bit_identical(backend):
+    rng = np.random.default_rng(8)
+    b, h, c, n, pa, pw = 2, 8, 3, 32, 8, 8
+    wf = _skewed(rng, 9 * c, n, quiet=slice(16, None))
+    w_packed, ws, counts = _pack(wf, pw)
+    xr = rng.normal(size=(b, h, h, c)).astype(np.float32)
+    xr[:, h // 2:] *= 0.02           # letterboxed: window groups trim too
+    x = jnp.asarray(xr)
+    base = ops.loom_conv_serve(x, w_packed, ws, kernel=3, stride=1,
+                               a_bits=pa, backend="xla")
+    out = ops.loom_conv_serve_dynamic(
+        x, w_packed, ws, kernel=3, stride=1, a_bits=pa, group_size=16,
+        backend=backend, w_counts=counts, w_group=16)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+# ---------------------------------------------------------------------------
+# Plan integration + end to end
+# ---------------------------------------------------------------------------
+
+def test_plan_resolves_policy_w_group_and_setter():
+    plan = build_plan(None, uniform_policy(8, 8, w_group=32),
+                      mode="serve_packed")
+    lp = plan.layer("fc0")
+    assert lp.w_group == 32 and lp.w_group_counts is None
+    plan.set_weight_counts("fc0", "linear", (np.int32(8), np.int32(4)))
+    lp = plan.layer("fc0")
+    assert lp.w_group_counts == (8, 4)
+    assert all(isinstance(c, int) for c in lp.w_group_counts)
+
+
+def test_session_records_counts_and_classify_parity():
+    from repro import configs
+    cfg = configs.get("paper-cnn", smoke=True)
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(2, cfg.img, cfg.img, cfg.in_ch)),
+                    jnp.float32)
+    on = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed")
+    off = loom.compile(cfg, uniform_policy(8, 8, w_group=0),
+                       mode="serve_packed")
+    # Every packed layer carries pack-time counts (conv AND the legacy
+    # im2col linear twin share them); the w_group=0 session records none.
+    for c in cfg.convs:
+        for kind in ("conv", "linear"):
+            lp = on.plan.layer(c.name, kind=kind)
+            assert lp.w_group_counts is not None
+            assert len(lp.w_group_counts) == -(-c.out_ch // lp.w_group)
+    assert off.plan.layer("conv1", kind="conv").w_group_counts is None
+    np.testing.assert_array_equal(np.asarray(on.classify(x)),
+                                  np.asarray(off.classify(x)))
+
+
+def test_lm_head_counts_recorded():
+    from repro import configs
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    sess = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed")
+    lp = sess.plan.layer("lm_head")
+    assert lp.w_group_counts is not None
+    assert len(lp.w_group_counts) == -(-cfg.vocab // lp.w_group)
+
+
+def test_no_hot_path_weight_count_recompute():
+    """Counts flow only from plan/pack metadata: no apply-path or backend
+    callsite may invoke the OR-tree count computation per call."""
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    pat = re.compile(r"weight_group_counts\s*\(")
+    offenders = []
+    hot = [os.path.join(root, "models"), os.path.join(root, "kernels")]
+    for sub in hot:
+        for dirpath, _, files in os.walk(sub):
+            for f in files:
+                if f.endswith(".py"):
+                    path = os.path.join(dirpath, f)
+                    with open(path) as fh:
+                        if pat.search(fh.read()):
+                            offenders.append(path)
+    with open(os.path.join(root, "api", "backend.py")) as fh:
+        if pat.search(fh.read()):
+            offenders.append("api/backend.py")
+    assert not offenders, offenders
+
+
+# ---------------------------------------------------------------------------
+# Stem fold (small-C XLA conv route)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c", (1, 3, 4, 6))
+@pytest.mark.parametrize("stride", (1, 2))
+def test_stem_fold_bit_identical(c, stride):
+    rng = np.random.default_rng(10)
+    b, h, n, kernel = 2, 8, 16, 3
+    xq = jnp.asarray(rng.integers(-127, 128, size=(b, h, h, c)), jnp.int32)
+    w4 = jnp.asarray(rng.integers(-127, 128,
+                                  size=(kernel, kernel, c, n)), jnp.int32)
+    want = ops.int_conv_same(xq, w4, stride, fold_kk=False)
+    for exact_f32 in (False, ops.conv_accum_fits_f32(kernel * kernel * c,
+                                                     8, 8)):
+        got = ops.int_conv_same(xq, w4, stride, exact_f32=exact_f32,
+                                fold_kk=True)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    auto = ops.int_conv_same(xq, w4, stride)         # auto-threshold route
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(auto))
+
+
+# ---------------------------------------------------------------------------
+# Cycle model + profiler
+# ---------------------------------------------------------------------------
+
+def test_pallas_all_full_counts_keeps_static_kernels(monkeypatch):
+    """Untrimmable counts (all == w_bits, the random-init default) must
+    stay on the tuned static kernels — the wgroup kernels' bn=w_group
+    tile shrink buys nothing when no plane is ever skipped."""
+    from repro.api import backend as backendlib
+    rng = np.random.default_rng(12)
+    pw = 8
+    wq, _ = q.quantize(jnp.asarray(rng.normal(size=(16, 32)), jnp.float32),
+                       pw)
+    w_packed = bitpack.pack_weights(wq, pw)
+
+    def _boom(*a, **k):
+        raise AssertionError("dynamic/wgroup kernel used for full counts")
+
+    monkeypatch.setattr(backendlib, "bitserial_matmul_dynamic", _boom)
+    monkeypatch.setattr(backendlib, "bitserial_conv_wgroup", _boom)
+    be = get_backend("pallas_interpret")
+    xq = jnp.asarray(rng.integers(-127, 128, size=(8, 16)), jnp.int8)
+    be.matmul_planes(xq, w_packed, w_bits=pw, w_counts=(8, 8),
+                     w_group=16).block_until_ready()
+    xc = jnp.asarray(rng.integers(-127, 128, size=(1, 4, 4, 16)), jnp.int8)
+    wqc, _ = q.quantize(jnp.asarray(rng.normal(size=(9 * 16, 32)),
+                                    jnp.float32), pw)
+    be.conv_planes(xc, bitpack.pack_weights(wqc, pw), kernel=3, stride=1,
+                   w_bits=pw, a_bits=8, w_counts=(8, 8),
+                   w_group=16).block_until_ready()
+
+
+def test_lm_cycles_pw_groups_accepts_arrays():
+    """Counts flow straight from weight_group_counts (jnp) or bench code
+    (np) — truthiness on those raises, so the guard must be len-based."""
+    layer = cyclemodel.Layer("conv", "cvl", 96 * 363 * 55 * 55, 96, 55 * 55)
+    wq = jnp.asarray([[127, 7], [0, 0]], jnp.int32)
+    counts = wg.weight_group_counts(wq, 8, 1)        # jnp array [8, 4]
+    got = cyclemodel.lm_cycles(layer, 8, 8, pw_groups=counts)
+    assert got == pytest.approx(cyclemodel.lm_cycles(layer, 8, 6.0))
+    got_np = cyclemodel.lm_cycles(layer, 8, 8, pw_groups=np.asarray(counts))
+    assert got_np == pytest.approx(got)
+
+
+def test_lm_cycles_pw_groups_mean():
+    layer = cyclemodel.Layer("conv", "cvl", 96 * 363 * 55 * 55, 96, 55 * 55)
+    grouped = cyclemodel.lm_cycles(layer, 8, 11, pw_groups=[4] * 3 + [8] * 3)
+    assert grouped == pytest.approx(cyclemodel.lm_cycles(layer, 8, 6.0))
+    assert grouped < cyclemodel.lm_cycles(layer, 8, 11)
+    fcl = cyclemodel.Layer("fc", "fcl", 4096 * 4096, 4096)
+    assert cyclemodel.lm_cycles(fcl, 16, 9, pw_groups=[3, 6]) == \
+        pytest.approx(cyclemodel.lm_cycles(fcl, 16, 4.5))
+
+
+def test_profiler_weight_group_precision():
+    rng = np.random.default_rng(11)
+    w = np.asarray(_skewed(rng, 27, 32, quiet=slice(16, None)))
+    rep = profiler.measure_weight_group_precision(jnp.asarray(w), 8,
+                                                  group_size=16)
+    assert rep["static_bits"] == 8 and rep["n_groups"] == 2
+    assert rep["per_group_bits"][0] == 8 and rep["per_group_bits"][1] <= 4
+    assert rep["mean_effective_bits"] == pytest.approx(
+        sum(rep["per_group_bits"]) / 2)
+    assert rep["plane_fraction_executed"] < 1.0
