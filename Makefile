@@ -13,17 +13,24 @@ LINT_PATHS = src/repro/api \
              src/repro/core/dynamic.py \
              src/repro/core/weightgroups.py \
              src/repro/launch/serve.py \
+             src/repro/runtime/faults.py \
+             src/repro/runtime/serving.py \
              benchmarks/kernelbench.py \
              benchmarks/bench_compare.py \
              tests/test_api.py \
              tests/test_conv_dynamic.py \
              tests/test_conv_tiled.py \
-             tests/test_wgroup.py
+             tests/test_wgroup.py \
+             tests/test_faults.py
 
-.PHONY: test bench bench-smoke bench-check lint
+.PHONY: test test-chaos bench bench-smoke bench-check lint
 
 test:
 	$(PY) -m pytest -x -q --durations=15
+
+# The fault-injection suite alone (it also runs as part of `make test`).
+test-chaos:
+	$(PY) -m pytest -q -m chaos
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/kernelbench.py

@@ -139,10 +139,23 @@ def main():
                          "catches gross drift, tolerates CPU noise")
     args = ap.parse_args()
 
-    with open(args.baseline) as fh:
-        baseline = json.load(fh)
-    with open(args.fresh) as fh:
-        fresh = json.load(fh)
+    # A missing or garbled record is an ops problem, not a crash: surface
+    # one actionable line (which file, what to do) instead of a traceback.
+    def load(path, role):
+        try:
+            with open(path) as fh:
+                return json.load(fh)
+        except FileNotFoundError:
+            sys.exit(f"[bench-compare] ERROR: {role} record {path!r} does "
+                     f"not exist — run `make bench-smoke` (or pass "
+                     f"--{role} with the right path)")
+        except json.JSONDecodeError as exc:
+            sys.exit(f"[bench-compare] ERROR: {role} record {path!r} is "
+                     f"not valid JSON ({exc}) — regenerate it with "
+                     f"benchmarks/kernelbench.py")
+
+    baseline = load(args.baseline, "baseline")
+    fresh = load(args.fresh, "fresh")
 
     failures, notes = compare(baseline, fresh, args.tolerance,
                               args.tracked_tolerance)

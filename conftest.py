@@ -14,6 +14,13 @@ _SRC = os.path.join(_ROOT, "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "chaos: deterministic fault-injection tests (runtime/faults.py); "
+        "run standalone with `pytest -m chaos`")
+
+
 try:  # pragma: no cover - environment probe
     import hypothesis  # noqa: F401
 except ImportError:  # gate the stub: real package always wins

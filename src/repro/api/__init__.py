@@ -10,17 +10,18 @@ in the model zoo, so it loads lazily on first attribute access to keep
 the layers -> plan import edge acyclic.
 """
 from repro.api import backend as backend  # noqa: PLC0414 (re-export)
+from repro.api import guards as guards    # noqa: PLC0414 (re-export)
 from repro.api import plan as plan        # noqa: PLC0414 (re-export)
-from repro.api.backend import (Backend, PallasBackend, get_backend,
-                               list_backends, register_backend,
-                               resolve_backend)
+from repro.api.backend import (Backend, GuardedBackend, PallasBackend,
+                               get_backend, guard_backend, list_backends,
+                               register_backend, resolve_backend)
 from repro.api.plan import (ExecutionPlan, LayerPlan, as_plan, build_plan)
 
 __all__ = [
-    "Backend", "PallasBackend", "get_backend", "list_backends",
-    "register_backend", "resolve_backend", "ExecutionPlan", "LayerPlan",
-    "as_plan", "build_plan", "compile", "ServingSession", "plan", "backend",
-    "session",
+    "Backend", "GuardedBackend", "PallasBackend", "get_backend",
+    "guard_backend", "list_backends", "register_backend", "resolve_backend",
+    "ExecutionPlan", "LayerPlan", "as_plan", "build_plan", "compile",
+    "ServingSession", "plan", "backend", "guards", "session",
 ]
 
 _SESSION_EXPORTS = ("compile", "ServingSession", "session")

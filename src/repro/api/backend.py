@@ -26,10 +26,13 @@ under a name, pass ``backend="yourname"`` to ``loom.compile``.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import guards
 from repro.core.weightgroups import (truncate_columns_grouped,
                                      truncate_signed as _truncate_signed)
 from repro.kernels import ref
@@ -366,6 +369,175 @@ class PallasBackend(Backend):
     def attention(self, q_, k_, v_, *, causal=True, window=None):
         return flash_attention(q_, k_, v_, causal=causal, window=window,
                                interpret=self.interpret)
+
+
+# -- Guarded dispatch -------------------------------------------------------
+
+# Degradation order: fastest substrate first, the always-works XLA oracle
+# last. A GuardedBackend's chain is the suffix of this list starting
+# after its inner backend (an unknown/out-of-tree inner falls straight
+# to the built-ins).
+DEFAULT_FALLBACK_CHAIN = ("pallas_tpu", "pallas_interpret", "xla")
+
+# The uniform op surface a Backend exposes (= what a GuardedBackend guards).
+BACKEND_OPS = ("matmul_planes", "matmul_planes_dynamic", "conv_planes",
+               "conv_planes_dynamic", "dynamic_quant", "attention")
+
+
+class GuardedBackend(Backend):
+    """Fault-classifying wrapper: fallback chain + numeric-integrity guards.
+
+    Wraps any registered backend. Every op dispatch:
+
+    1. runs the *numeric-integrity prechecks* — operand-shape coherence
+       against the packed layout and the accumulator-overflow bound
+       recomputed from the ACTUAL (Pa, Pw, K) of the operands (typed
+       :class:`repro.api.guards.AccumulatorOverflowError` /
+       ``BackendShapeError``; these fail loudly rather than fall back,
+       because every chain member shares the same int32 accumulator);
+    2. fires the ``backend.op`` fault point (chaos testing);
+    3. delegates to the innermost non-failed backend in the chain. A
+       non-transient failure (compile / resource / shape / unknown, per
+       :func:`repro.api.guards.classify_error`) degrades the op to the
+       next chain member with a one-line warning, and the op STAYS
+       fallen back (sticky per op — recorded in ``fallbacks_by_op``,
+       readable through the owning plan's ``fallback_report()``).
+       Transient failures re-raise unchanged: the serving supervisor owns
+       the retry, and the substrate is not the problem.
+
+    Bit-transparency contract: on the fault-free path every op returns
+    the inner backend's result unchanged — guarded serving is
+    byte-identical to unguarded serving (CI's serve-smoke invariant).
+    """
+
+    def __init__(self, inner, chain=None):
+        inner = resolve_backend(inner)
+        self.inner = inner
+        self.name = f"guarded:{inner.name}"
+        self.use_pallas = inner.use_pallas
+        self.interpret = inner.interpret
+        self.vmem_budget = inner.vmem_budget
+        if chain is None:
+            names = list(DEFAULT_FALLBACK_CHAIN)
+            if inner.name in names:
+                names = names[names.index(inner.name) + 1:]
+            chain = [get_backend(n) for n in names]
+        else:
+            chain = [resolve_backend(b) for b in chain]
+        self.chain: list[Backend] = [inner] + [b for b in chain
+                                               if b is not inner]
+        self.fallbacks_by_op: dict[str, str] = {}   # op -> serving backend
+        self._active_idx: dict[str, int] = {}
+
+    def __repr__(self):
+        return (f"<GuardedBackend {self.inner.name} "
+                f"chain={[b.name for b in self.chain[1:]]} "
+                f"fallbacks={self.fallbacks_by_op}>")
+
+    def active_backend(self, op: str) -> Backend:
+        """The chain member currently serving ``op``."""
+        return self.chain[self._active_idx.get(op, 0)]
+
+    def _dispatch(self, op: str, *args, **kwargs):
+        from repro.runtime import faults
+        start = self._active_idx.get(op, 0)
+        last_exc = None
+        for i in range(start, len(self.chain)):
+            b = self.chain[i]
+            try:
+                faults.fire("backend.op", detail=f"{op}:{b.name}")
+                return getattr(b, op)(*args, **kwargs)
+            except Exception as exc:  # noqa: BLE001 — classified below
+                kind = guards.classify_error(exc)
+                if kind == guards.TRANSIENT:
+                    raise   # substrate is fine; the supervisor retries
+                last_exc = exc
+                if i + 1 < len(self.chain):
+                    nxt = self.chain[i + 1]
+                    warnings.warn(
+                        f"[guarded] {op}: backend {b.name!r} failed "
+                        f"({kind}: {exc}) — falling back to {nxt.name!r} "
+                        f"(sticky)", RuntimeWarning, stacklevel=3)
+                    self._active_idx[op] = i + 1
+                    self.fallbacks_by_op[op] = nxt.name
+        raise guards.FallbackExhaustedError(
+            f"{op}: every backend in the fallback chain "
+            f"{[b.name for b in self.chain]} failed") from last_exc
+
+    @staticmethod
+    def _check_packed_k(k_logical: int, w_packed, op: str) -> int:
+        """Packed-layout coherence: the packed K dim must be the logical
+        reduction length rounded up to the 8-row pack quantum."""
+        k8 = int(w_packed.shape[1]) * 8
+        if not 0 <= k8 - k_logical < 8:
+            raise guards.BackendShapeError(
+                f"{op}: packed operand covers K={k8} but the logical "
+                f"reduction length is {k_logical} (pad quantum is 8 rows) "
+                f"— operands are incoherent")
+        return k8
+
+    # -- guarded op surface -------------------------------------------------
+
+    def matmul_planes(self, xq, w_packed, *, w_bits, a_bits=8, w_counts=None,
+                      w_group=16):
+        k8 = self._check_packed_k(int(xq.shape[-1]), w_packed,
+                                  "matmul_planes")
+        guards.check_accum_bound(k8, a_bits, w_bits, "matmul_planes")
+        return self._dispatch("matmul_planes", xq, w_packed, w_bits=w_bits,
+                              a_bits=a_bits, w_counts=w_counts,
+                              w_group=w_group)
+
+    def matmul_planes_dynamic(self, xq, w_packed, plane_counts, *, w_bits,
+                              bn):
+        # Dense operand rides int8 passes (<= 8 magnitude bits) on every
+        # caller; the packed operand carries w_bits planes.
+        k8 = self._check_packed_k(int(xq.shape[-1]), w_packed,
+                                  "matmul_planes_dynamic")
+        guards.check_accum_bound(k8, 8, w_bits, "matmul_planes_dynamic")
+        return self._dispatch("matmul_planes_dynamic", xq, w_packed,
+                              plane_counts, w_bits=w_bits, bn=bn)
+
+    def conv_planes(self, xq, w_packed, *, kernel, stride, w_bits, a_bits,
+                    conv_tile=None, w_counts=None, w_group=16):
+        kkc = kernel * kernel * int(xq.shape[-1])
+        self._check_packed_k(kkc, w_packed, "conv_planes")
+        guards.check_accum_bound(kkc, a_bits, w_bits, "conv_planes")
+        return self._dispatch("conv_planes", xq, w_packed, kernel=kernel,
+                              stride=stride, w_bits=w_bits, a_bits=a_bits,
+                              conv_tile=conv_tile, w_counts=w_counts,
+                              w_group=w_group)
+
+    def conv_planes_dynamic(self, xq, w_packed, counts, *, kernel, stride,
+                            w_bits, a_bits, group_size, w_counts=None,
+                            w_group=16):
+        kkc = kernel * kernel * int(xq.shape[-1])
+        self._check_packed_k(kkc, w_packed, "conv_planes_dynamic")
+        guards.check_accum_bound(kkc, a_bits, w_bits, "conv_planes_dynamic")
+        return self._dispatch("conv_planes_dynamic", xq, w_packed, counts,
+                              kernel=kernel, stride=stride, w_bits=w_bits,
+                              a_bits=a_bits, group_size=group_size,
+                              w_counts=w_counts, w_group=w_group)
+
+    def dynamic_quant(self, x2, *, group_size, bits):
+        # A NaN/Inf activation quantizes to garbage silently; reject it
+        # here (concrete arrays only — inside jit the check is a no-op
+        # and the value path is untouched either way).
+        guards.check_finite(x2, "dynamic_quant input")
+        return self._dispatch("dynamic_quant", x2, group_size=group_size,
+                              bits=bits)
+
+    def attention(self, q_, k_, v_, *, causal=True, window=None):
+        return self._dispatch("attention", q_, k_, v_, causal=causal,
+                              window=window)
+
+
+def guard_backend(backend, chain=None) -> GuardedBackend:
+    """Wrap ``backend`` (object or registered name) in a GuardedBackend.
+
+    Idempotent: an already-guarded backend is returned unchanged."""
+    if isinstance(backend, GuardedBackend):
+        return backend
+    return GuardedBackend(backend, chain=chain)
 
 
 _REGISTRY: dict[str, Backend] = {}

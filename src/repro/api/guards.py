@@ -1,0 +1,169 @@
+"""Typed fault taxonomy + numeric-integrity checks for guarded serving.
+
+The serving stack's failure contract: every fault is either *healed*
+(retry, backend fallback, previous checkpoint) or surfaced as one of the
+typed errors below — never a traceback soup and never a silent wrong
+answer. Two independent mechanisms consume this module:
+
+  * :class:`repro.api.backend.GuardedBackend` classifies exceptions from
+    an inner backend op (:func:`classify_error`) to decide between
+    re-raising (transient: the supervisor retries the request) and
+    degrading down the fallback chain (compile/resource/shape: the op is
+    permanently broken on that substrate, so it is re-dispatched on the
+    next one and *stays* there).
+  * :class:`repro.runtime.serving.ServingSupervisor` retries transient
+    faults with backoff and checks numeric integrity of concrete outputs
+    (:func:`check_finite`).
+
+Accumulator-overflow guard: the kernels' f32-mantissa fast path and the
+int32 accumulation are both exact only while every partial sum fits the
+respective width. ``kernels.ops.conv_accum_fits_f32`` gates the f32 path,
+but nothing gated int32 — a large-K high-precision layer would wrap
+silently and serve wrong logits. :func:`check_accum_bound` recomputes
+both bounds from the *actual* (Pa, Pw, K) of the operands about to be
+dispatched and raises :class:`AccumulatorOverflowError` when int32 can
+wrap (fail loudly: there is no wider backend to fall back to).
+"""
+from __future__ import annotations
+
+# -- Typed error taxonomy ---------------------------------------------------
+
+
+class ServingFault(RuntimeError):
+    """Base of every typed serving-stack fault."""
+
+
+class BackendFault(ServingFault):
+    """Base of faults attributed to a backend op dispatch."""
+
+
+class BackendTransientError(BackendFault):
+    """A fault a plain retry should heal (no substrate change needed)."""
+
+
+class BackendCompileError(BackendFault):
+    """Kernel lowering/compilation failed on this substrate (permanent)."""
+
+
+class BackendResourceError(BackendFault):
+    """VMEM/HBM exhaustion on this substrate (permanent at this shape)."""
+
+
+class BackendShapeError(BackendFault):
+    """Operand shapes are incoherent for the op (caller bug; permanent)."""
+
+
+class FallbackExhaustedError(BackendFault):
+    """Every backend in the fallback chain failed for an op."""
+
+
+class NumericIntegrityError(ServingFault):
+    """NaN/Inf detected where the serve path guarantees finite values."""
+
+
+class AccumulatorOverflowError(NumericIntegrityError):
+    """(Pa, Pw, K) can overflow the int32 accumulator: wrong logits."""
+
+
+class RequestTimeoutError(ServingFault):
+    """A supervised request exceeded its per-request timeout."""
+
+
+# Exception types/classifications a retry may heal. TimeoutError covers
+# concurrent.futures timeouts bubbling through worker threads.
+_TRANSIENT_MESSAGE_MARKERS = ("transient", "preempt", "connection reset",
+                              "unavailable", "deadline exceeded")
+_COMPILE_MESSAGE_MARKERS = ("mosaic", "lowering", "compil", "pallas",
+                            "unsupported primitive", "unimplemented")
+_RESOURCE_MESSAGE_MARKERS = ("resource_exhausted", "resource exhausted",
+                             "out of memory", "vmem", "oom",
+                             "allocation failure")
+
+TRANSIENT, COMPILE, RESOURCE, SHAPE, FATAL = (
+    "transient", "compile", "resource", "shape", "fatal")
+
+
+def classify_error(exc: BaseException) -> str:
+    """Map an exception from a backend op to a fault category.
+
+    Returns one of ``transient | compile | resource | shape | fatal``.
+    Typed errors classify by type; foreign exceptions (XLA runtime
+    errors, Mosaic lowering failures, ...) by message markers. ``fatal``
+    means "cause unknown": the guarded dispatcher still degrades down
+    the chain (the op may work on a simpler substrate) but a supervisor
+    must not blind-retry it.
+    """
+    from repro.runtime.supervisor import TransientWorkerError
+    if isinstance(exc, (TransientWorkerError, BackendTransientError,
+                        TimeoutError, ConnectionError)):
+        return TRANSIENT
+    if isinstance(exc, BackendCompileError):
+        return COMPILE
+    if isinstance(exc, (BackendResourceError, MemoryError)):
+        return RESOURCE
+    if isinstance(exc, BackendShapeError):
+        return SHAPE
+    msg = str(exc).lower()
+    if any(m in msg for m in _TRANSIENT_MESSAGE_MARKERS):
+        return TRANSIENT
+    if any(m in msg for m in _RESOURCE_MESSAGE_MARKERS):
+        return RESOURCE
+    if any(m in msg for m in _COMPILE_MESSAGE_MARKERS):
+        return COMPILE
+    if isinstance(exc, (TypeError, ValueError, AssertionError)) and (
+            "shape" in msg or "dim" in msg or "rank" in msg):
+        return SHAPE
+    return FATAL
+
+
+# -- Numeric-integrity checks ----------------------------------------------
+
+# int32 accumulates exactly up to 2^31 - 1; the f32 fast path up to 2^24.
+_INT32_BITS = 31
+_F32_MANTISSA_BITS = 24
+
+
+def accum_magnitude_bits(k: int, a_bits: int, w_bits: int) -> int:
+    """Bits needed for the worst-case |sum of k products| of signed
+    ``a_bits`` x ``w_bits`` operands: ceil(log2(k * 2^(Pa-1) * 2^(Pw-1)))."""
+    return (max(int(k), 1) - 1).bit_length() + (a_bits - 1) + (w_bits - 1)
+
+
+def accum_fits_f32(k: int, a_bits: int, w_bits: int) -> bool:
+    """The f32-mantissa fast-path predicate, recomputed from first
+    principles (must agree with ``kernels.ops.conv_accum_fits_f32``)."""
+    return max(int(k), 1) << (a_bits - 1 + w_bits - 1) <= 1 << _F32_MANTISSA_BITS
+
+
+def check_accum_bound(k: int, a_bits: int, w_bits: int,
+                      where: str = "") -> None:
+    """Raise :class:`AccumulatorOverflowError` when the int32 accumulator
+    of a k-deep (Pa, Pw) reduction can wrap. Called by the guarded
+    backend with K derived from the actual operands, not from config."""
+    need = accum_magnitude_bits(k, a_bits, w_bits)
+    if need > _INT32_BITS:
+        raise AccumulatorOverflowError(
+            f"{where or 'reduction'}: K={k} at (Pa={a_bits}, Pw={w_bits}) "
+            f"needs {need} accumulator bits > int32's {_INT32_BITS}; "
+            f"the result would wrap silently — refusing to dispatch")
+
+
+def check_finite(x, where: str = "") -> None:
+    """Raise :class:`NumericIntegrityError` if ``x`` holds NaN/Inf.
+
+    Only checks *concrete* float arrays: inside a jit trace (abstract
+    tracers) the check is a structural no-op, so guarded tracing stays
+    bit-transparent — the value path is never modified either way.
+    """
+    import jax
+    import numpy as np
+    if isinstance(x, jax.core.Tracer):
+        return
+    arr = np.asarray(x)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return
+    if not bool(np.isfinite(arr).all()):
+        n_bad = int(np.size(arr) - np.isfinite(arr).sum())
+        raise NumericIntegrityError(
+            f"{where or 'output'}: {n_bad}/{arr.size} non-finite values "
+            f"(NaN/Inf) — refusing to serve a silent wrong answer")

@@ -164,6 +164,17 @@ class ExecutionPlan:
             lp, conv_tile=rpb, conv_tile_geom=geom)
         return rpb
 
+    def fallback_report(self) -> dict:
+        """Which ops degraded off the primary backend, and to where.
+
+        The plan owns the backend, so backend fallbacks ARE plan state:
+        a :class:`~repro.api.backend.GuardedBackend` records every sticky
+        per-op fallback in ``fallbacks_by_op`` and this accessor exposes
+        it (``{}`` for unguarded backends / the fault-free path). A layer
+        whose op fell back stays fallen back for the plan's lifetime.
+        """
+        return dict(getattr(self.backend, "fallbacks_by_op", {}))
+
     def record_weight_groups(self, named_params: dict) -> None:
         """Freeze pack-time per-filter-group weight plane counts into plans.
 

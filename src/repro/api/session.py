@@ -143,7 +143,8 @@ def _jit_lm(cfg, plan, mesh, param_specs, cache_specs):
 def compile(cfg, policy: Optional[PrecisionPolicy] = None,
             mode: str = "dense", backend="xla", *,
             params=None, specs=None, rng: int = 0,
-            conv_route: str = "fused", mesh=None) -> ServingSession:
+            conv_route: str = "fused", mesh=None,
+            guarded: bool = False) -> ServingSession:
     """Compile a model for serving: plans + params + jitted entry points.
 
     cfg: a ``ModelConfig`` (LM: prefill/decode/generate) or ``CNNConfig``
@@ -152,11 +153,20 @@ def compile(cfg, policy: Optional[PrecisionPolicy] = None,
     randomly initialized from ``rng``. ``backend``: registered name or
     Backend object. ``mesh``: optional jax Mesh — prefill/decode are then
     jitted with resolved in/out shardings (the launch-layer wiring).
+    ``guarded``: wrap the backend in a
+    :class:`~repro.api.backend.GuardedBackend` — typed fault
+    classification, sticky per-op fallback down the degradation chain,
+    and numeric-integrity prechecks; bit-identical to unguarded on the
+    fault-free path (pair with ``repro.runtime.ServingSupervisor`` for
+    request-level retry/timeout/health).
     """
     policy = policy if policy is not None else PrecisionPolicy()
     if params is not None and specs is None:
         raise ValueError("compile(params=...) also needs specs=... "
                          "(the PartitionSpec tree from init_params)")
+    if guarded:
+        from repro.api.backend import guard_backend
+        backend = guard_backend(backend)
     plan = build_plan(cfg, policy, mode, backend, conv_route)
 
     if hasattr(cfg, "convs"):            # CNN session

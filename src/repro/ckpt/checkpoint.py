@@ -1,10 +1,21 @@
-"""Checkpointing: atomic, async, elastic-reshardable.
+"""Checkpointing: atomic, durable, integrity-checked, elastic-reshardable.
 
 Layout: ``<dir>/step_<n>/`` holding one ``.npy`` per pytree leaf (path-
-encoded filename) + ``manifest.json`` (treedef paths, shapes, dtypes, step,
-mesh shape at save time). Writes go to ``step_<n>.tmp`` then os.rename —
-a crashed save never shadows the previous good checkpoint (fault
-tolerance requirement: restart always finds a consistent state).
+encoded filename) + ``manifest.json`` (treedef paths, shapes, dtypes,
+per-leaf CRC32 of the stored bytes, step, mesh shape at save time).
+Writes go to ``step_<n>.tmp`` then os.rename, with every leaf file, the
+manifest, the tmp directory, and the parent directory fsync'd around the
+rename — a crash at ANY point never shadows the previous good checkpoint
+with a torn one (fault tolerance requirement: restart always finds a
+consistent state).
+
+Integrity: restore verifies each leaf's CRC32 + shape + stored dtype
+against the manifest and raises a typed :class:`CheckpointCorruptError`
+on mismatch; :func:`restore_latest` (and the manager method) skips a
+corrupt step with a one-line warning and falls back to the previous good
+checkpoint — only when EVERY checkpoint is corrupt does it fail, loudly.
+Chaos coverage: the ``ckpt.leaf_corrupt`` / ``ckpt.crash_rename`` fault
+points (``repro.runtime.faults``) exercise both paths deterministically.
 
 Elastic restore: leaves are saved as FULL (unsharded) host arrays and
 restored with jax.device_put against whatever mesh/sharding the *current*
@@ -23,10 +34,21 @@ import json
 import os
 import shutil
 import threading
+import warnings
+import zlib
 
 import jax
 import ml_dtypes
 import numpy as np
+
+from repro.runtime import faults
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (CRC/shape/dtype/missing
+    file). Typed so restore_latest can fall back to the previous step and
+    supervisors can classify it as non-retryable."""
+
 
 _EXT_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
                "float8_e4m3fn": getattr(ml_dtypes, "float8_e4m3fn", None),
@@ -52,9 +74,39 @@ def _leaf_filename(key: str) -> str:
     return key.replace("/", "__") + ".npy"
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory entries need their own
+    fsync for the rename to be durable across a crash)."""
+    flags = os.O_RDONLY
+    if os.path.isdir(path):
+        flags |= getattr(os, "O_DIRECTORY", 0)
+    fd = os.open(path, flags)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _corrupt_one_leaf(tmp: str) -> None:
+    """ckpt.leaf_corrupt fault effect: flip a data byte of the first leaf
+    (deterministic), AFTER its CRC was recorded — restore must reject it."""
+    leaf = sorted(f for f in os.listdir(tmp) if f.endswith(".npy"))[0]
+    path = os.path.join(tmp, leaf)
+    with open(path, "r+b") as f:
+        f.seek(-1, os.SEEK_END)          # last byte: array data, not header
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([byte[0] ^ 0xFF]))
+
+
 def save_checkpoint(ckpt_dir: str, step: int, state, *, compress: str = "none",
                     extra_meta: dict | None = None) -> str:
-    """Synchronous atomic save. compress: "none" | "bf16"."""
+    """Synchronous atomic + durable save. compress: "none" | "bf16".
+
+    Every leaf file and the manifest are fsync'd, then the tmp directory,
+    then (after the rename) the checkpoint directory — a crash mid-save
+    can only lose the new step, never tear it or the previous one.
+    """
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
@@ -70,44 +122,112 @@ def save_checkpoint(ckpt_dir: str, step: int, state, *, compress: str = "none",
         # extension dtypes are stored as raw same-width ints (pickle-free)
         if stored_dtype in _EXT_STORAGE:
             arr = arr.view(_EXT_STORAGE[stored_dtype])
-        np.save(os.path.join(tmp, _leaf_filename(key)), arr,
-                allow_pickle=False)
+        with open(os.path.join(tmp, _leaf_filename(key)), "wb") as f:
+            np.save(f, arr, allow_pickle=False)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"][key] = {"dtype": logical_dtype,
                                    "stored": stored_dtype,
-                                   "shape": list(arr.shape)}
+                                   "shape": list(arr.shape),
+                                   "crc32": zlib.crc32(arr.tobytes())}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if faults.take("ckpt.leaf_corrupt"):
+        _corrupt_one_leaf(tmp)
+    _fsync_path(tmp)
+    faults.fire("ckpt.crash_rename")     # chaos: die before the rename
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_path(ckpt_dir)
     return final
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def _all_steps(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and not d.endswith(".tmp"))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = _all_steps(ckpt_dir)
     return max(steps) if steps else None
+
+
+def restore_latest(ckpt_dir: str, like, *, shardings=None):
+    """Restore the newest checkpoint that passes integrity verification.
+
+    A corrupt step (CRC/shape/dtype mismatch, torn files) is skipped with
+    a one-line warning and the previous good step is restored instead.
+    Returns ``(None, None)`` when the directory holds no checkpoints;
+    raises :class:`CheckpointCorruptError` when every step is corrupt —
+    restarting from scratch silently would be a silent wrong answer.
+    """
+    steps = _all_steps(ckpt_dir)
+    if not steps:
+        return None, None
+    last_exc = None
+    for step in reversed(steps):
+        try:
+            return restore_checkpoint(ckpt_dir, step, like,
+                                      shardings=shardings)
+        except CheckpointCorruptError as exc:
+            warnings.warn(f"[ckpt] skipping corrupt checkpoint: {exc} — "
+                          f"falling back to the previous step",
+                          RuntimeWarning, stacklevel=2)
+            last_exc = exc
+    raise CheckpointCorruptError(
+        f"all {len(steps)} checkpoint(s) in {ckpt_dir!r} failed integrity "
+        f"verification") from last_exc
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like, *, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). ``shardings``: matching pytree of NamedShardings for
-    elastic placement on the current mesh (None = default device)."""
+    elastic placement on the current mesh (None = default device).
+
+    Integrity: each leaf's stored bytes are CRC32-verified (and its
+    shape/stored-dtype cross-checked) against the manifest; any mismatch,
+    unreadable manifest, or missing leaf file raises a typed
+    :class:`CheckpointCorruptError` so callers can fall back to the
+    previous good step instead of serving from corrupt state.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        raise CheckpointCorruptError(
+            f"step {step}: unreadable manifest ({exc})") from exc
     like_flat = _flatten_with_paths(like)
     shard_flat = _flatten_with_paths(shardings) if shardings is not None else {}
     restored = {}
     for key, tgt in like_flat.items():
         if key not in manifest["leaves"]:
             raise KeyError(f"checkpoint missing leaf {key}")
-        arr = np.load(os.path.join(path, _leaf_filename(key)),
-                      allow_pickle=False)
         meta = manifest["leaves"][key]
+        try:
+            arr = np.load(os.path.join(path, _leaf_filename(key)),
+                          allow_pickle=False)
+        except (OSError, ValueError) as exc:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {key!r} unreadable ({exc})") from exc
+        if "crc32" in meta and zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {key!r} failed CRC32 verification "
+                f"(bytes on disk differ from what was saved)")
+        if list(arr.shape) != list(meta["shape"]):
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {key!r} stored shape {list(arr.shape)} "
+                f"!= manifest shape {meta['shape']}")
         stored = meta.get("stored", meta["dtype"])
+        if stored not in _EXT_STORAGE and str(arr.dtype) != stored:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {key!r} stored dtype {arr.dtype} "
+                f"!= manifest dtype {stored!r}")
         if stored in _EXT_STORAGE:
             arr = arr.view(_np_dtype(stored))
         arr = arr.astype(_np_dtype(meta["dtype"]))
@@ -143,23 +263,33 @@ class CheckpointManager:
         self.keep_n = keep_n
         self.compress = compress
         self._thread: threading.Thread | None = None
+        self._async_exc: BaseException | None = None
         os.makedirs(ckpt_dir, exist_ok=True)
 
     def should_save(self, step: int) -> bool:
         return step > 0 and step % self.every == 0
 
     def wait(self):
+        """Join the in-flight async save; re-raise its exception if it
+        failed — a dropped save error would silently cost a checkpoint."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._async_exc is not None:
+            exc, self._async_exc = self._async_exc, None
+            raise exc
 
     def save_async(self, step: int, state):
         self.wait()
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
 
         def _write():
-            save_checkpoint(self.dir, step, host_state, compress=self.compress)
-            self._prune()
+            try:
+                save_checkpoint(self.dir, step, host_state,
+                                compress=self.compress)
+                self._prune()
+            except BaseException as exc:  # surfaced on the next wait()
+                self._async_exc = exc
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -172,8 +302,7 @@ class CheckpointManager:
                           ignore_errors=True)
 
     def restore_latest(self, like, shardings=None):
+        """Newest VERIFIED checkpoint (corrupt steps are skipped with a
+        warning; see module-level :func:`restore_latest`)."""
         self.wait()
-        step = latest_step(self.dir)
-        if step is None:
-            return None, None
-        return restore_checkpoint(self.dir, step, like, shardings=shardings)
+        return restore_latest(self.dir, like, shardings=shardings)

@@ -96,12 +96,17 @@ def _generate_plan(cfg, args, policy):
 
 
 def _generate_session(cfg, args, policy):
-    """The same serving cell through loom.compile()."""
+    """The same serving cell through loom.compile().
+
+    ``--guarded`` compiles with a GuardedBackend and routes requests
+    through a ServingSupervisor — byte-identical generations on the
+    fault-free path (the CI serve-smoke job diffs guarded vs unguarded).
+    """
     import numpy as np
     from repro.api import session as loom
 
     sess = loom.compile(cfg, policy, mode=args.mode, backend=args.backend,
-                        rng=0)
+                        rng=0, guarded=getattr(args, "guarded", False))
     if args.mode != "dense":
         print(f"[serve] packed weights for mode={args.mode} "
               f"(Pw={args.w_bits}: weight bytes x{args.w_bits}/16 of bf16)")
@@ -109,6 +114,12 @@ def _generate_session(cfg, args, policy):
     tokens = jnp.asarray(rng.integers(1, cfg.vocab,
                                       size=(args.batch, args.prompt_len)),
                          jnp.int32)
+    if getattr(args, "guarded", False):
+        from repro.runtime import ServingSupervisor
+        sup = ServingSupervisor(sess)
+        gen = sup.generate(tokens, args.gen_len)
+        print(f"[serve] supervisor health: {sup.health()}")
+        return gen
     return sess.generate(tokens, args.gen_len)
 
 
@@ -143,8 +154,14 @@ def _classify_session(cfg, args, policy):
     from repro.api import session as loom
 
     sess = loom.compile(cfg, policy, mode=args.mode, backend=args.backend,
-                        rng=0)
-    logits = sess.classify(_cnn_inputs(cfg, args))
+                        rng=0, guarded=getattr(args, "guarded", False))
+    if getattr(args, "guarded", False):
+        from repro.runtime import ServingSupervisor
+        sup = ServingSupervisor(sess)
+        logits = sup.classify(_cnn_inputs(cfg, args))
+        print(f"[serve] supervisor health: {sup.health()}")
+    else:
+        logits = sess.classify(_cnn_inputs(cfg, args))
     return np.argmax(np.asarray(logits), axis=-1)
 
 
@@ -161,6 +178,10 @@ def main(argv=None):
     ap.add_argument("--dynamic-a", action="store_true",
                     help="runtime per-group activation-plane trimming "
                          "(serve_packed linears)")
+    ap.add_argument("--guarded", action="store_true",
+                    help="guarded backend (typed faults + fallback chain) "
+                         "+ ServingSupervisor request wrapper; "
+                         "bit-identical on the fault-free path")
     ap.add_argument("--group-size", type=int, default=256)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)

@@ -1,2 +1,28 @@
+"""Runtime fault tolerance: training supervisor, serving supervisor,
+deterministic fault injection.
+
+``faults`` and the training supervisor are dependency-light and imported
+eagerly (``ckpt`` hooks fault points into checkpoint writes). The serving
+side (``ServingSupervisor``) pulls in the model/plan stack, so it loads
+lazily on first attribute access.
+"""
+from repro.runtime import faults as faults  # noqa: PLC0414 (re-export)
 from repro.runtime.supervisor import (Supervisor, StepMonitor, RunState,
                                       TransientWorkerError)
+
+__all__ = ["Supervisor", "StepMonitor", "RunState", "TransientWorkerError",
+           "faults", "ServingSupervisor", "ServeStats", "serving",
+           "HEALTHY", "DEGRADED", "FAILED"]
+
+_SERVING_EXPORTS = ("ServingSupervisor", "ServeStats", "serving",
+                    "HEALTHY", "DEGRADED", "FAILED")
+
+
+def __getattr__(name: str):
+    if name in _SERVING_EXPORTS:
+        import importlib
+        serving = importlib.import_module("repro.runtime.serving")
+        if name == "serving":
+            return serving
+        return getattr(serving, name)
+    raise AttributeError(f"module 'repro.runtime' has no attribute {name!r}")

@@ -49,6 +49,7 @@ class RunState:
     loss_ema: float = float("nan")
     n_restarts: int = 0
     n_skipped_spikes: int = 0
+    n_skipped_nonfinite: int = 0   # non-finite losses before the EMA seeded
     n_straggler_events: int = 0
 
 
@@ -112,6 +113,7 @@ class Supervisor:
         self.run.step = start
         while self.run.step < n_steps and not self._stop:
             t0 = time.monotonic()
+            prev_state = state
             try:
                 state, loss = self.step_fn(state, self.run.step)
             except TransientWorkerError:
@@ -131,11 +133,22 @@ class Supervisor:
                 self.on_straggler(self.run.step, dt)
 
             loss = float(loss)
-            if np.isfinite(self.run.loss_ema) and (
-                    not np.isfinite(loss)
-                    or loss > self.spike_factor * self.run.loss_ema):
+            if not np.isfinite(loss):
+                # A non-finite loss never reaches the EMA: seeding it with
+                # NaN used to permanently disarm the spike guard (the
+                # isfinite(loss_ema) arm condition could never hold again).
+                if np.isfinite(self.run.loss_ema):
+                    self.run.n_skipped_spikes += 1
+                else:
+                    self.run.n_skipped_nonfinite += 1
+                state = prev_state          # drop the poisoned update
+                self.run.step += 1
+                continue
+            if np.isfinite(self.run.loss_ema) and \
+                    loss > self.spike_factor * self.run.loss_ema:
                 # Spike guard: drop this update, keep the previous state.
                 self.run.n_skipped_spikes += 1
+                state = prev_state
                 self.run.step += 1
                 continue
             self.run.loss_ema = (loss if not np.isfinite(self.run.loss_ema)
