@@ -15,13 +15,15 @@ LINT_PATHS = src/repro/api \
              src/repro/launch/serve.py \
              src/repro/runtime/faults.py \
              src/repro/runtime/serving.py \
+             src/repro/runtime/batching \
              benchmarks/kernelbench.py \
              benchmarks/bench_compare.py \
              tests/test_api.py \
              tests/test_conv_dynamic.py \
              tests/test_conv_tiled.py \
              tests/test_wgroup.py \
-             tests/test_faults.py
+             tests/test_faults.py \
+             tests/test_batching.py
 
 .PHONY: test test-chaos bench bench-smoke bench-check lint
 

@@ -74,7 +74,12 @@ EXACT_FIELDS = ("passes", "weight_bytes", "act_bytes", "im2col_patch_bytes",
                 "wgroup_plane_passes_static", "wgroup_weight_bytes",
                 "composed_plane_passes", "composed_plane_passes_static",
                 # stem_*: the small-C fold A/B.
-                "stem_kkc", "stem_folded")
+                "stem_kkc", "stem_folded",
+                # serve_occ*: continuous-batching engine geometry. The
+                # tokens/s-vs-occupancy-1 ratio rides the existing
+                # measured_speedup tracked field; absolute tokens_per_s is
+                # informational (cross-machine).
+                "occupancy", "max_batch")
 
 
 def compare(baseline: dict, fresh: dict, tolerance: float,

@@ -177,9 +177,12 @@ def _conv_im2col_serve(x, w_packed, w_scale, kernel, stride, a_bits):
         for dj in range(kernel):
             cols.append(xp[:, di:di + h:stride, dj:dj + w_:stride, :])
     patches = jnp.concatenate(cols, axis=-1)
+    # a_axis=None: one per-tensor activation scale, matching the fused
+    # conv lowering's grid (the serve linear default is per-row scales,
+    # which would break the bit-exact A/B against loom_conv_serve).
     return ops.loom_linear_serve(
         patches, w_packed, w_scale, a_bits=a_bits,
-        w_bits=w_packed.shape[0], backend="xla")
+        w_bits=w_packed.shape[0], backend="xla", a_axis=None)
 
 
 def bench_conv(results):
@@ -689,6 +692,60 @@ def validate_payload(payload, schema_path, required=False):
     print(f"schema OK ({schema_path})")
 
 
+def bench_serve(results):
+    """Continuous-batching engine: decode tokens/s at occupancy 1/4/8.
+
+    Loom's FC/decode regime is weight-precision-bound (PAPER.md Sec 1),
+    so batch-1 decode spends the whole packed weight-plane walk on ONE
+    token; the batching engine amortizes it across co-resident requests.
+    The engine always decodes the full max_batch-wide pool under one jit
+    trace, so the step cost is ~flat in occupancy and tokens/s scales
+    ~linearly with it. ``measured_speedup`` records tokens/s relative to
+    the occupancy-1 run of the same session — a machine-stable ratio
+    (same trace, same box) tracked by bench_compare; absolute tokens/s
+    is informational. ``occupancy``/``max_batch`` are exact law fields.
+    """
+    from repro import configs as repro_configs
+    from repro.api import session as loom
+    from repro.core.policy import uniform_policy
+    from repro.runtime.batching import BatchingEngine
+
+    print("== continuous-batching engine: decode tokens/s vs occupancy ==")
+    cfg = repro_configs.get("qwen3-1.7b", smoke=True)
+    sess = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend="xla", rng=0)
+    rng = np.random.default_rng(17)
+    max_batch, prompt_len = 8, 8
+    n_steps = max(4, 3 * N_REPS)
+    base_tps = None
+    for occ in (1, 4, 8):
+        eng = BatchingEngine(sess, max_batch=max_batch)
+        handles = [
+            eng.submit(rng.integers(1, cfg.vocab,
+                                    size=(prompt_len,)).astype(np.int32),
+                       n_steps + 8)
+            for _ in range(occ)]
+        eng.step()                # admit everyone + compile the decode trace
+        t0 = time.perf_counter()
+        for _ in range(n_steps):  # nobody retires inside the timed window
+            eng.step()
+        dt = time.perf_counter() - t0
+        for h in handles:
+            h.cancel()
+        eng.run(max_steps=10)     # drain the cancellations
+        tps = occ * n_steps / dt
+        base_tps = tps if base_tps is None else base_tps
+        speedup = tps / base_tps
+        us_step = dt / n_steps * 1e6
+        print(f"  occupancy={occ}: {us_step:9.1f} us/step  {tps:8.1f} tok/s"
+              f"  x{speedup:.2f} vs occ=1")
+        results[f"serve_occ{occ}"] = {
+            "us": us_step, "passes": 8,
+            "occupancy": occ, "max_batch": max_batch,
+            "tokens_per_s": tps,
+            "measured_speedup": speedup}
+
+
 def main():
     global N_REPS
     ap = argparse.ArgumentParser()
@@ -707,6 +764,7 @@ def main():
     bench_dynamic(results)
     bench_conv_dynamic(results)
     bench_wgroup(results)
+    bench_serve(results)
     payload = {"bench": "kernelbench", "note": BATCH_ENGINE_NOTE,
                "configs": results}
     # Write FIRST — a schema failure must not discard minutes of timings.

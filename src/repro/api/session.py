@@ -62,7 +62,9 @@ class ServingSession:
         return self._prefill(self.params, tokens, cache, img_embeds)
 
     def decode(self, token: jax.Array, pos, cache):
-        """One greedy-decode step. token: [B] int32; pos: absolute scalar."""
+        """One greedy-decode step. token: [B] int32; pos: absolute position,
+        a scalar (whole batch at one position) or a [B] int32 vector of
+        per-row positions (continuous batching — see runtime/batching)."""
         if self._decode is None:
             raise ValueError(f"{self.cfg.name}: not an LM session")
         return self._decode(self.params, token,
@@ -72,17 +74,19 @@ class ServingSession:
         """Greedy generation: prefill + gen_len decode steps.
 
         Returns int32 [B, gen_len] (bit-compatible with the historical
-        ``launch/serve.py`` driver loop for the same params/seed)."""
+        ``launch/serve.py`` driver loop for the same params/seed).
+        Decoded tokens accumulate ON DEVICE; the single host transfer
+        happens at the end instead of one round-trip per step."""
         import numpy as np
         b, s = tokens.shape
         logits, cache = self.prefill(tokens)
         tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-        out = [np.asarray(tok)]
+        out = [tok]
         for i in range(gen_len - 1):
             logits, cache = self.decode(tok, s + i, cache)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(np.asarray(tok))
-        return np.stack(out, axis=1)
+            out.append(tok)
+        return np.asarray(jnp.stack(out, axis=1))
 
     # -- CNN entry point ----------------------------------------------------
 

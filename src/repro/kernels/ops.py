@@ -22,7 +22,8 @@ from repro.kernels import ref
 
 def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
                       *, a_bits: int, w_bits: int, backend=None,
-                      w_counts=None, w_group: int = 16) -> jax.Array:
+                      w_counts=None, w_group: int = 16,
+                      a_axis: int | None = -1) -> jax.Array:
     """Serving-path linear: activations dynamically quantized to a_bits,
     weights pre-packed bit-serially. Output in x.dtype.
 
@@ -31,6 +32,9 @@ def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
     counts (``LayerPlan.w_group_counts`` — Python ints, never recomputed
     here); the backend then executes only each group's effective planes,
     bit-identically to the untrimmed path.
+    ``a_axis``: activation-quantization axis. Default -1 = per-row scales
+    (each token row on its own grid — continuous batching's byte-identity
+    bar); None = one per-tensor scale (the conv/im2col lowering's grid).
     """
     be = resolve_backend(backend)
     lead = x.shape[:-1]
@@ -42,7 +46,11 @@ def loom_linear_serve(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array,
     if k8 != k:  # pack_weights zero-pads K%8 rows; mirror on activations
         x2 = jnp.pad(x2, ((0, 0), (0, k8 - k)))
     a_bits = min(a_bits, 8)  # int8 kernel ABI; Pa>8 would wrap in astype
-    xq, x_scale = q.quantize(x2, a_bits)
+    # Per-ROW scales (default): each token row quantizes on its own grid,
+    # so a row's result is invariant to whatever it is co-batched with
+    # (continuous batching's byte-identity bar). For batch-1 the row scale
+    # IS the tensor scale.
+    xq, x_scale = q.quantize(x2, a_bits, axis=a_axis)
     # Trimming kwargs only travel when counts exist: out-of-tree Backend
     # subclasses overriding the pre-trimming signatures keep working on
     # the untrimmed path.
@@ -64,11 +72,13 @@ def loom_linear_serve_dynamic(x: jax.Array, w_packed: jax.Array,
                               w_scale: jax.Array, *, a_bits: int,
                               w_bits: int, group_size: int = 256,
                               backend=None, w_counts=None,
-                              w_group: int = 16) -> jax.Array:
+                              w_group: int = 16,
+                              a_axis: int | None = -1) -> jax.Array:
     """Dynamic-precision serving linear: runtime activation-plane trimming.
 
     Loom's Lascorz-style path: activations are quantized on the SAME
-    per-tensor grid as the static path, then an OR-tree finds each group's
+    grid as the static path (per-row by default — see ``a_axis`` on
+    :func:`loom_linear_serve`), then an OR-tree finds each group's
     minimum sufficient precision and only that many ACTIVATION bit planes
     execute — trimming below the static per-layer profile at runtime,
     value-preserving (2's-complement truncation), so the result is
@@ -101,7 +111,9 @@ def loom_linear_serve_dynamic(x: jax.Array, w_packed: jax.Array,
     if k8 != k:
         x2 = jnp.pad(x2, ((0, 0), (0, k8 - k)))
     a_bits = min(a_bits, 8)
-    xq, x_scale = q.quantize(x2, a_bits)          # static-path grid: parity
+    # same grid as the static path (per-row by default): bit-identical
+    # composition, no cross-row leakage of the quant grid under batching
+    xq, x_scale = q.quantize(x2, a_bits, axis=a_axis)
     m = xq.shape[0]
     # Group = group_size concurrently-processed rows; tiny batches clamp
     # to one 8-row-aligned group rather than padding 256x.

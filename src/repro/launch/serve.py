@@ -80,7 +80,7 @@ def _generate_plan(cfg, args, policy):
     prefill_fn = jax.jit(prefill_fn)
     decode_fn = jax.jit(decode_fn, donate_argnums=(3,))
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(getattr(args, "prompt_seed", 0))
     b, s = args.batch, args.prompt_len
     tokens = jnp.asarray(rng.integers(1, cfg.vocab, size=(b, s)), jnp.int32)
     cache = M.init_cache(cfg, b, cfg.max_seq)
@@ -110,7 +110,7 @@ def _generate_session(cfg, args, policy):
     if args.mode != "dense":
         print(f"[serve] packed weights for mode={args.mode} "
               f"(Pw={args.w_bits}: weight bytes x{args.w_bits}/16 of bf16)")
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(getattr(args, "prompt_seed", 0))
     tokens = jnp.asarray(rng.integers(1, cfg.vocab,
                                       size=(args.batch, args.prompt_len)),
                          jnp.int32)
@@ -121,6 +121,52 @@ def _generate_session(cfg, args, policy):
         print(f"[serve] supervisor health: {sup.health()}")
         return gen
     return sess.generate(tokens, args.gen_len)
+
+
+def _server_prompt(cfg, args, j: int):
+    """Request ``j``'s prompt: seed prompt_seed + j, length prompt_len + j.
+
+    Deterministic per request so CI can reproduce EXACTLY this prompt in
+    a solo batch-1 run (``--batch 1 --prompt-seed <seed+j>
+    --prompt-len <len+j>``) and diff the streams byte-for-byte."""
+    import numpy as np
+    rng = np.random.default_rng(args.prompt_seed + j)
+    return rng.integers(1, cfg.vocab,
+                        size=(args.prompt_len + j,)).astype(np.int32)
+
+
+def _serve_server(cfg, args, policy):
+    """Continuous-batching server mode: ``--server N`` staggered requests
+    through a BatchingEngine (supervised when ``--guarded``); returns the
+    per-request streams stacked [N, gen_len] for the CI stream diff."""
+    import numpy as np
+    from repro.api import session as loom
+    from repro.runtime.batching import BatchingEngine
+
+    sess = loom.compile(cfg, policy, mode=args.mode, backend=args.backend,
+                        rng=0, guarded=args.guarded)
+    target = sess
+    if args.guarded:
+        from repro.runtime import ServingSupervisor
+        target = ServingSupervisor(sess)
+    eng = BatchingEngine(target, max_batch=args.batch)
+    handles = []
+    for j in range(args.server):
+        handles.append(eng.submit(_server_prompt(cfg, args, j),
+                                  args.gen_len))
+        eng.step()       # staggered joins: requests join a running batch
+    eng.run(max_steps=10_000)
+    streams = np.stack([h.result(timeout=60.0) for h in handles])
+    st = eng.stats
+    print(f"[serve] server: {args.server} requests done "
+          f"state={eng.health()['state']} "
+          f"occupancy={st.batch_occupancy:.2f} "
+          f"tokens/s={st.tokens_per_s:.2f} "
+          f"queue_depth={st.queue_depth} "
+          f"latency={st.mean_request_latency_s:.3f}s "
+          f"streamed={st.n_tokens_streamed} "
+          f"restarts={st.n_engine_restarts}")
+    return streams
 
 
 def _cnn_inputs(cfg, args):
@@ -186,6 +232,16 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--server", type=int, default=0, metavar="N",
+                    help="continuous-batching server mode: N staggered "
+                         "requests through a BatchingEngine (--batch = "
+                         "slot count; request j: seed prompt-seed+j, "
+                         "length prompt-len+j); prints the serving "
+                         "metrics summary line")
+    ap.add_argument("--prompt-seed", type=int, default=0,
+                    help="seed of the random prompt(s); lets CI "
+                         "reproduce one server request's prompt in a "
+                         "solo batch-1 run")
     ap.add_argument("--a-bits", type=int, default=8)
     ap.add_argument("--w-bits", type=int, default=8)
     ap.add_argument("--out-tokens", default=None, metavar="FILE",
@@ -203,11 +259,18 @@ def main(argv=None):
         import dataclasses as dc
         policy = dc.replace(policy, group_size=args.group_size)
     if hasattr(cfg, "convs"):            # CNN classification cell
+        if args.server:
+            raise SystemExit("--server is an LM decode mode; CNN configs "
+                             "classify in one shot (drop --server)")
         cls_fn = _classify_session if args.api == "session" else _classify_plan
         gen = cls_fn(cfg, args, policy)
         print(f"[serve] classified {gen.shape[0]} images via {args.api} "
               f"({args.backend}{', dynamic-a' if args.dynamic_a else ''}); "
               f"predictions: {gen}")
+    elif args.server:
+        gen = _serve_server(cfg, args, policy)
+        print(f"[serve] generated {gen.shape} tokens via batching engine "
+              f"({args.backend}{', dynamic-a' if args.dynamic_a else ''})")
     else:
         gen_fn = _generate_session if args.api == "session" else _generate_plan
         gen = gen_fn(cfg, args, policy)

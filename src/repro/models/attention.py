@@ -310,7 +310,9 @@ def init_cache(cfg: AttnConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
     cache = {
         "k": jnp.zeros(shape, kv_dtype),
         "v": jnp.zeros(shape, kv_dtype),
-        "slot_pos": jnp.full((s_cache,), -1, jnp.int32),
+        # per-ROW slot positions: batched serving decodes rows at different
+        # absolute positions, so the causal mask must be per-slot
+        "slot_pos": jnp.full((batch, s_cache), -1, jnp.int32),
     }
     if cfg.kv_cache_bits == 8:
         cache["k_scale"] = jnp.zeros((batch, s_cache, cfg.n_kv_heads), jnp.float32)
@@ -321,7 +323,7 @@ def init_cache(cfg: AttnConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
 def cache_specs(cfg: AttnConfig):
     """Sequence-sharded ("sp") KV cache — flash-decoding layout."""
     sp = {"k": PS("dp", "sp", None, None), "v": PS("dp", "sp", None, None),
-          "slot_pos": PS("sp")}
+          "slot_pos": PS("dp", "sp")}
     if cfg.kv_cache_bits == 8:
         sp["k_scale"] = PS("dp", "sp", None)
         sp["v_scale"] = PS("dp", "sp", None)
@@ -349,25 +351,54 @@ def _mask_update(buf, new, slot):
     return jnp.where(hit, new.astype(buf.dtype), buf)
 
 
+def _row_update(buf, new, slot):
+    """Per-ROW one-slot write: buf [B,S,...], new [B,1,...], slot [B].
+
+    Each batch row writes its own slot — dynamic_update_slice cannot
+    express per-row indices, so this is a where() against a [B,S] hit
+    mask (elementwise, shard-friendly like _mask_update)."""
+    s_cache = buf.shape[1]
+    hit = (jnp.arange(s_cache)[None, :] == slot[:, None]).reshape(
+        buf.shape[:2] + (1,) * (buf.ndim - 2))
+    return jnp.where(hit, new.astype(buf.dtype), buf)
+
+
+def _write_slot_pos(sp, pos, slot):
+    """Record ``pos`` at ``slot`` in the slot_pos map (1-D or [B,S])."""
+    s_cache = sp.shape[-1]
+    if jnp.ndim(slot) == 1:                    # per-row slots, sp is [B,S]
+        hit = jnp.arange(s_cache)[None, :] == slot[:, None]
+        return jnp.where(hit, pos[:, None].astype(jnp.int32), sp)
+    hit = jnp.arange(s_cache) == slot
+    if sp.ndim == 2:
+        hit = hit[None, :]
+    return jnp.where(hit, jnp.asarray(pos, jnp.int32), sp)
+
+
 def cache_update(cache: dict, cfg: AttnConfig, k_new, v_new, pos):
-    """Insert one token's K/V at absolute position ``pos`` (ring for SWA)."""
+    """Insert one token's K/V at absolute position ``pos`` (ring for SWA).
+
+    ``pos`` may be a scalar (whole batch at one position) or a [B] vector
+    (continuous batching: each row decodes at its own position; writes go
+    to per-row slots via masked where()-updates)."""
     s_cache = cache["k"].shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
     slot = pos % s_cache
-    if cfg.mask_cache_update:
+    per_row = pos.ndim == 1
+    if per_row or cfg.mask_cache_update:
+        upd = _row_update if per_row else _mask_update
         cache = dict(cache)
         if cfg.kv_cache_bits == 8:
             kq, ks = _quant_kv(k_new)
             vq, vs = _quant_kv(v_new)
-            cache["k"] = _mask_update(cache["k"], kq, slot)
-            cache["v"] = _mask_update(cache["v"], vq, slot)
-            cache["k_scale"] = _mask_update(cache["k_scale"], ks, slot)
-            cache["v_scale"] = _mask_update(cache["v_scale"], vs, slot)
+            cache["k"] = upd(cache["k"], kq, slot)
+            cache["v"] = upd(cache["v"], vq, slot)
+            cache["k_scale"] = upd(cache["k_scale"], ks, slot)
+            cache["v_scale"] = upd(cache["v_scale"], vs, slot)
         else:
-            cache["k"] = _mask_update(cache["k"], k_new, slot)
-            cache["v"] = _mask_update(cache["v"], v_new, slot)
-        cache["slot_pos"] = jnp.where(jnp.arange(s_cache) == slot,
-                                      pos.astype(jnp.int32),
-                                      cache["slot_pos"])
+            cache["k"] = upd(cache["k"], k_new, slot)
+            cache["v"] = upd(cache["v"], v_new, slot)
+        cache["slot_pos"] = _write_slot_pos(cache["slot_pos"], pos, slot)
         return cache
     if cfg.kv_cache_bits == 8:
         kq, ks = _quant_kv(k_new)
@@ -383,9 +414,24 @@ def cache_update(cache: dict, cfg: AttnConfig, k_new, v_new, pos):
             cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
         cache["v"] = jax.lax.dynamic_update_slice_in_dim(
             cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
-    cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["slot_pos"], pos[None].astype(jnp.int32), slot, 0)
+    cache["slot_pos"] = _write_slot_pos(cache["slot_pos"], pos, slot)
     return cache
+
+
+def _valid_slots(cache: dict, cfg: AttnConfig, pos):
+    """Causal validity mask over cache slots, shape [B-or-1, S].
+
+    Accepts scalar or [B] ``pos`` and 1-D (legacy) or [B,S] slot_pos —
+    each row masks against ITS OWN decode position."""
+    sp = cache["slot_pos"]
+    if sp.ndim == 1:
+        sp = sp[None, :]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = pos[:, None] if pos.ndim == 1 else pos
+    valid = (sp >= 0) & (sp <= pos_b)
+    if cfg.window is not None:
+        valid &= sp > pos_b - cfg.window
+    return valid
 
 
 def decode_attend(q, cache: dict, cfg: AttnConfig, pos):
@@ -419,11 +465,8 @@ def decode_attend(q, cache: dict, cfg: AttnConfig, pos):
     logits = jnp.einsum("bhqd,bhkd->bhqk", qt, kh.astype(jnp.float32))
     if cfg.decode_pin_seq:
         logits = constraint(logits, PS("dp", None, None, "sp"))
-    slot_pos = cache["slot_pos"]
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
-    if cfg.window is not None:
-        valid &= slot_pos > pos - cfg.window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    valid = _valid_slots(cache, cfg, pos)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     p_ = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p_, vh.astype(jnp.float32))
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
@@ -456,11 +499,8 @@ def _decode_attend_gqa_int8(q, cache, cfg: AttnConfig, pos):
     logits = logits_i.astype(jnp.float32) * q_scale         * k_scale[:, :, None, :]
     if cfg.decode_pin_seq:
         logits = constraint(logits, PS("dp", None, None, "sp"))
-    slot_pos = cache["slot_pos"]
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
-    if cfg.window is not None:
-        valid &= slot_pos > pos - cfg.window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    valid = _valid_slots(cache, cfg, pos)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     p_ = jax.nn.softmax(logits, axis=-1)
     # fold v_scale into p, then integer PV: p is [0,1] -> uint-ish int8 grid
     pv = p_ * v_scale[:, :, None, :]                   # [B,G,R,S]
@@ -492,11 +532,8 @@ def _decode_attend_gqa(q, k, v, cache, cfg: AttnConfig, pos):
     logits = jnp.einsum("bgrd,bgsd->bgrs", qt, kt.astype(jnp.float32))
     if cfg.decode_pin_seq:
         logits = constraint(logits, PS("dp", None, None, "sp"))
-    slot_pos = cache["slot_pos"]
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
-    if cfg.window is not None:
-        valid &= slot_pos > pos - cfg.window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    valid = _valid_slots(cache, cfg, pos)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     p_ = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bgrs,bgsd->bgrd", p_, vt.astype(jnp.float32))
     return out.reshape(b, 1, hq, d).astype(q.dtype)
@@ -559,13 +596,20 @@ def apply_prefill(p, cfg: AttnConfig, x, positions, exec_cfg, cache):
     else:
         cache["k"] = cache["k"].at[:, slots].set(k_tail.astype(cache["k"].dtype))
         cache["v"] = cache["v"].at[:, slots].set(v_tail.astype(cache["v"].dtype))
-    cache["slot_pos"] = cache["slot_pos"].at[slots].set(pos_tail.astype(jnp.int32))
+    cache["slot_pos"] = cache["slot_pos"].at[:, slots].set(
+        pos_tail.astype(jnp.int32))
     return L.linear_apply(p["wo"], out, exec_cfg, "attn_o"), cache
 
 
 def apply_decode(p, cfg: AttnConfig, x, pos, exec_cfg, cache):
-    """One-token decode. x: [B, 1, d]. Returns (out [B,1,d], cache)."""
-    positions = pos[None]  # [1] broadcasts across the batch in rope
+    """One-token decode. x: [B, 1, d]. Returns (out [B,1,d], cache).
+
+    ``pos`` is a scalar (whole batch at one position) or a [B] vector
+    (continuous batching: per-row positions for rope, cache write, and
+    causal masking)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    # [1] or [B,1]: both broadcast per-row in rope
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     q = L.linear_apply(p["wq"], x, exec_cfg, "attn_q")
     q = q.reshape(x.shape[0], 1, cfg.n_heads, cfg.d_head)
     if cfg.cross:
@@ -600,5 +644,5 @@ def init_cross_cache(p, cfg: AttnConfig, enc: jax.Array, exec_cfg):
     if cfg.qk_norm:
         k = L.rms_norm(k, p["knorm"]["g"])
     cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
-             "slot_pos": jnp.arange(n, dtype=jnp.int32) * 0}
+             "slot_pos": jnp.zeros((b, n), jnp.int32)}
     return cache

@@ -104,9 +104,23 @@ def _linear_fake_quant(p, x, lp, be):
     return xq @ wq
 
 
+def _token_quant_axis(x) -> int | None:
+    """Activation-quant axis for the serving linears. Token-shaped inputs
+    ([B, D] / [B, S, D]) get per-ROW scales, so a row's quantization grid
+    never depends on what it is co-batched with (the batching engine's
+    byte-identity bar; for batch-1 the row scale IS the tensor scale).
+    Conv-as-im2col patch tensors ([B, Ho, Wo, k*k*C]) keep the single
+    per-tensor scale the fused conv lowering uses — the two conv routes
+    stay bit-identical."""
+    return -1 if x.ndim <= 3 else None
+
+
 def _linear_int8(p, x, lp, be):
-    # LM_8b: one int8 MXU pass against pre-quantized weights.
-    xq, x_scale = q.quantize(x.astype(jnp.float32), min(lp.a_bits, 8))
+    # LM_8b: one int8 MXU pass against pre-quantized weights. Token-shaped
+    # inputs quantize per ROW — no cross-row grid leakage under batching;
+    # conv-as-im2col patch tensors keep the fused conv's per-tensor grid.
+    xq, x_scale = q.quantize(x.astype(jnp.float32), min(lp.a_bits, 8),
+                             axis=_token_quant_axis(x))
     y = jax.lax.dot_general(
         xq.astype(jnp.int8), p["wq"],
         (((x.ndim - 1,), (0,)), ((), ())),
@@ -127,11 +141,13 @@ def _linear_packed(p, x, lp, be):
         return ops.loom_linear_serve_dynamic(
             x, p["w_packed"], p["w_scale"], a_bits=lp.a_bits,
             w_bits=p["w_packed"].shape[0], group_size=lp.group_size,
-            backend=be, w_counts=lp.w_group_counts, w_group=lp.w_group)
+            backend=be, w_counts=lp.w_group_counts, w_group=lp.w_group,
+            a_axis=_token_quant_axis(x))
     return ops.loom_linear_serve(
         x, p["w_packed"], p["w_scale"], a_bits=lp.a_bits,
         w_bits=p["w_packed"].shape[0], backend=be,
-        w_counts=lp.w_group_counts, w_group=lp.w_group)
+        w_counts=lp.w_group_counts, w_group=lp.w_group,
+        a_axis=_token_quant_axis(x))
 
 
 _LINEAR_ROUTES = {

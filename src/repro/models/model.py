@@ -175,7 +175,9 @@ def prefill(params, cfg: T.ModelConfig, tokens, cache, exec_cfg,
 
 
 def decode_step(params, cfg: T.ModelConfig, token, pos, cache, exec_cfg):
-    """One decode step. token: [B] int32; pos: scalar int32 absolute pos.
+    """One decode step. token: [B] int32; pos: scalar int32 absolute pos,
+    or a [B] int32 vector of per-row positions (continuous batching —
+    each row ropes, writes its cache slot, and masks at its own pos).
 
     Returns (logits [B, V], new_cache)."""
     x = L.embed_apply(params["embed"], token[:, None]).astype(jnp.bfloat16)

@@ -188,7 +188,7 @@ def block_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
         n = cfg.n_img_tokens
         return {"k": jnp.zeros((batch, n, a.n_kv_heads, a.d_head), jnp.bfloat16),
                 "v": jnp.zeros((batch, n, a.n_kv_heads, a.d_head), jnp.bfloat16),
-                "slot_pos": jnp.zeros((n,), jnp.int32)}
+                "slot_pos": jnp.zeros((batch, n), jnp.int32)}
     return attn.init_cache(cfg.attn_cfg(spec), batch, max_seq)
 
 
@@ -197,5 +197,5 @@ def block_cache_specs(cfg: ModelConfig, spec: LayerSpec):
         return ssm_mod.cache_specs(cfg.ssm)
     if spec.kind == "cross":
         return {"k": PS("dp", "sp", None, None), "v": PS("dp", "sp", None, None),
-                "slot_pos": PS("sp")}
+                "slot_pos": PS("dp", "sp")}
     return attn.cache_specs(cfg.attn_cfg(spec))

@@ -12,17 +12,27 @@ from repro.runtime.supervisor import (Supervisor, StepMonitor, RunState,
 
 __all__ = ["Supervisor", "StepMonitor", "RunState", "TransientWorkerError",
            "faults", "ServingSupervisor", "ServeStats", "serving",
-           "HEALTHY", "DEGRADED", "FAILED"]
+           "HEALTHY", "DEGRADED", "FAILED",
+           "BatchingEngine", "StreamHandle", "batching"]
 
 _SERVING_EXPORTS = ("ServingSupervisor", "ServeStats", "serving",
                     "HEALTHY", "DEGRADED", "FAILED")
 
+# The batching engine sits on top of serving and the model stack — same
+# lazy-load treatment.
+_BATCHING_EXPORTS = ("BatchingEngine", "StreamHandle", "batching")
+
 
 def __getattr__(name: str):
+    import importlib
     if name in _SERVING_EXPORTS:
-        import importlib
         serving = importlib.import_module("repro.runtime.serving")
         if name == "serving":
             return serving
         return getattr(serving, name)
+    if name in _BATCHING_EXPORTS:
+        batching = importlib.import_module("repro.runtime.batching")
+        if name == "batching":
+            return batching
+        return getattr(batching, name)
     raise AttributeError(f"module 'repro.runtime' has no attribute {name!r}")

@@ -1,0 +1,300 @@
+"""BatchingEngine: continuous-batching decode loop over a ServingSession.
+
+The step loop (one :meth:`step` per decode-step boundary):
+
+  1. retire requests whose callers cancelled since the last step;
+  2. admit queued requests into free slots — each admission is a
+     batch-1 prefill (bit-identical to a solo prefill of the same
+     prompt) scattered into its pool slot, so running requests never
+     wait behind a drain barrier;
+  3. run ONE batched decode over the full ``max_batch``-wide pool with
+     per-slot positions (``pos: [B]``) and scatter the argmax tokens to
+     the per-request :class:`~repro.runtime.batching.streams.StreamHandle`
+     objects; inactive rows decode garbage into their own row only, and
+     admission rewrites the whole row anyway;
+  4. feed the serving gauges (queue depth, occupancy, tokens/s,
+     latency) into :class:`~repro.runtime.serving.ServeStats`.
+
+Byte-identity: every cross-row coupling in the decode path has been
+removed (per-ROW activation quantization scales; per-slot causal masks;
+value-preserving dynamic plane truncation), so row ``r`` of the batched
+decode is bit-identical to a solo batch-1 ``session.generate`` of the
+same prompt — regardless of co-batched traffic. The parity tests in
+``tests/test_batching.py`` pin this across backends and trim configs.
+
+Fault composition (with or without a :class:`ServingSupervisor`): the
+decode jit DONATES the cache, so a fault that surfaces after execution
+(e.g. NaN poisoning) leaves the old pool unusable — a naive step retry
+is impossible. Instead the engine RESTARTS-AND-REPLAYS: fresh pool,
+re-prefill every active request, regenerate deterministically while
+suppressing tokens the streams already received (replayed tokens are
+byte-identical by the parity property). Restarts are bounded by
+``max_restarts`` consecutive failures; prefill faults retry per-request
+and fail only that request's stream. Either way the QUEUE survives —
+a faulted step degrades the session, never the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.batching import streams
+from repro.runtime.batching.kvpool import KVPool
+from repro.runtime.batching.scheduler import FCFSScheduler, Request
+
+
+def _retryable():
+    from repro.runtime.serving import _RETRYABLE
+    return _RETRYABLE
+
+
+class BatchingEngine:
+    """Continuous-batching front end over a compiled ServingSession.
+
+    ``session``: a :class:`~repro.api.session.ServingSession` (LM), or a
+    :class:`~repro.runtime.serving.ServingSupervisor` wrapping one — the
+    engine then runs the supervisor's instrumented entry points (fault
+    points + numeric-integrity checks fire per step), shares its
+    :class:`ServeStats`, and degrades its health state on restarts.
+    """
+
+    def __init__(self, session, *, max_batch: int = 8,
+                 max_seq: int | None = None, max_restarts: int = 2,
+                 prefill_retries: int = 2, backoff_s: float = 0.02):
+        from repro.runtime import serving
+        if isinstance(session, serving.ServingSupervisor):
+            self.supervisor = session
+            self.stats = session.stats
+        else:
+            self.supervisor = None
+            self.stats = serving.ServeStats()
+            self._bare_session = session
+        if self.session._decode is None:
+            raise ValueError(f"{self.session.cfg.name}: not an LM session "
+                             f"(the batching engine serves decode loops)")
+        self.max_batch = int(max_batch)
+        self.max_restarts = int(max_restarts)
+        self.prefill_retries = int(prefill_retries)
+        self.backoff_s = float(backoff_s)
+        self.scheduler = FCFSScheduler()
+        self.pool = KVPool(self.session, self.max_batch, max_seq)
+        self.max_seq = self.pool.max_seq
+        self.active: dict[int, Request] = {}
+        self._tok = np.zeros(self.max_batch, np.int32)
+        self._pos = np.zeros(self.max_batch, np.int32)
+        self._n_decode_steps = 0
+        self._occ_sum = 0
+        self._busy_s = 0.0
+        self._n_streamed = 0
+        self._n_restarts = 0
+        self._consec_restarts = 0
+        self._lat_sum = 0.0
+        self._lat_n = 0
+
+    @property
+    def session(self):
+        """The serving session (the supervisor's instrumented one when
+        composed — so a rebuilt/degraded session is picked up live)."""
+        if self.supervisor is not None:
+            return self.supervisor.session
+        return self._bare_session
+
+    # -- public surface ------------------------------------------------------
+
+    def submit(self, prompt, gen_len: int) -> streams.StreamHandle:
+        """Enqueue one request; returns its stream immediately."""
+        req = self.scheduler.submit(prompt, gen_len)
+        self.stats.n_requests += 1
+        self.stats.queue_depth = self.scheduler.depth
+        return req.stream
+
+    def step(self) -> bool:
+        """One engine step (admit + one batched decode). Returns True
+        while there is work left (active slots or queued requests)."""
+        t0 = time.monotonic()
+        self._retire_cancelled()
+        self._admit()
+        if self.active:
+            self._decode_once()
+        self._busy_s += time.monotonic() - t0
+        self._feed_stats()
+        return bool(self.active) or self.scheduler.depth > 0
+
+    def run(self, max_steps: int | None = None) -> None:
+        """Drive :meth:`step` until the queue and the batch drain."""
+        steps = 0
+        while self.step():
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(
+                    f"engine did not drain within {max_steps} steps "
+                    f"({len(self.active)} active, "
+                    f"{self.scheduler.depth} queued)")
+
+    def health(self) -> dict:
+        """Supervisor health when composed, else an engine-local view."""
+        if self.supervisor is not None:
+            return self.supervisor.health()
+        from repro.runtime import serving
+        state = serving.DEGRADED if self._n_restarts else serving.HEALTHY
+        return {"state": state, "backend": self.session.plan.backend.name,
+                "fallbacks": {}, "stats": dataclasses.asdict(self.stats)}
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def _retire(self, req: Request, state: str,
+                error: BaseException | None = None) -> None:
+        if req.slot in self.active:
+            del self.active[req.slot]
+            self.pool.free(req.slot)
+        req.stream._finish(state, error)
+        if state == streams.DONE:
+            self.stats.n_ok += 1
+            self._lat_sum += time.monotonic() - req.submit_t
+            self._lat_n += 1
+        elif state == streams.FAILED:
+            self.stats.n_failed += 1
+            self.stats.last_error = f"{type(error).__name__}: {error}"
+
+    def _retire_cancelled(self) -> None:
+        for req in [r for r in self.active.values()
+                    if r.stream.cancel_requested]:
+            self._retire(req, streams.CANCELLED)
+
+    def _admit(self) -> None:
+        admitted, dropped = self.scheduler.assemble(self.pool.n_free)
+        for req in dropped:
+            req.stream._finish(streams.CANCELLED)
+        for req in admitted:
+            self._place(req)
+        if admitted or dropped:
+            self.stats.queue_depth = self.scheduler.depth
+
+    def _place(self, req: Request) -> None:
+        """Prefill ``req`` into a free slot (bounded per-request retries);
+        a prefill that cannot heal fails ONLY this request's stream."""
+        slot = self.pool.alloc()
+        req.slot = slot
+        req.stream._set_state(streams.PREFILLING)
+        try:
+            self._prefill_into(req)
+        except Exception as exc:  # noqa: BLE001 — typed/classified upstream
+            self.pool.free(slot)
+            req.slot = -1
+            self._retire(req, streams.FAILED, exc)
+            return
+        self.active[slot] = req
+        self._tok[slot] = req.token
+        self._pos[slot] = req.pos
+        req.stream._set_state(streams.DECODING)
+        if req.finished:           # gen_len == 1: the prefill token is all
+            self._retire(req, streams.DONE)
+
+    def _prefill_into(self, req: Request) -> None:
+        s = int(req.prompt.shape[0])
+        if s + req.gen_len > self.max_seq:
+            raise ValueError(
+                f"request {req.request_id}: prompt_len {s} + gen_len "
+                f"{req.gen_len} exceeds the pool's max_seq {self.max_seq}")
+        tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+        attempt = 0
+        while True:
+            try:
+                cache1 = self.session.init_cache(1, self.max_seq)
+                logits, cache1 = self.session.prefill(tokens, cache=cache1)
+                tok0 = int(jnp.argmax(logits[:, 0], axis=-1)[0])
+                break
+            except _retryable() as exc:
+                if attempt >= self.prefill_retries:
+                    raise
+                attempt += 1
+                self.stats.n_retries += 1
+                self._degrade(exc)
+                time.sleep(self.backoff_s * (2 ** (attempt - 1)))
+        self.pool.scatter_prefill(req.slot, cache1)
+        req.pos = s
+        self._emit(req, tok0)
+
+    def _emit(self, req: Request, token: int) -> None:
+        if req.emit(token):
+            self._n_streamed += 1
+            self.stats.n_tokens_streamed = self._n_streamed
+
+    # -- the batched decode step ---------------------------------------------
+
+    def _decode_once(self) -> None:
+        try:
+            logits, cache = self.session.decode(
+                jnp.asarray(self._tok), jnp.asarray(self._pos),
+                self.pool.cache)
+            self.pool.cache = cache
+            toks = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        except _retryable() as exc:
+            self._restart(exc)
+            return
+        self._consec_restarts = 0
+        self._n_decode_steps += 1
+        self._occ_sum += len(self.active)
+        for slot in sorted(self.active):
+            req = self.active[slot]
+            self._emit(req, int(toks[slot]))
+            req.pos += 1
+            self._tok[slot] = req.token
+            self._pos[slot] = req.pos
+            if req.finished:
+                self._retire(req, streams.DONE)
+            elif req.stream.cancel_requested:
+                self._retire(req, streams.CANCELLED)
+
+    # -- restart-and-replay ----------------------------------------------------
+
+    def _degrade(self, exc: BaseException) -> None:
+        self.stats.last_error = f"{type(exc).__name__}: {exc}"
+        if self.supervisor is not None:
+            from repro.runtime import serving
+            if self.supervisor.state == serving.HEALTHY:
+                self.supervisor.state = serving.DEGRADED
+
+    def _restart(self, exc: BaseException) -> None:
+        """A decode step faulted. The decode jit donates the cache, so the
+        pool may be gone either way — rebuild it and REPLAY every active
+        request from its prompt, suppressing already-delivered tokens
+        (deterministic regeneration => the suppressed prefix is
+        byte-identical to what the streams already saw)."""
+        self._consec_restarts += 1
+        self._n_restarts += 1
+        self.stats.n_engine_restarts = self._n_restarts
+        self._degrade(exc)
+        survivors = [self.active[s] for s in sorted(self.active)]
+        self.active.clear()
+        self._tok[:] = 0
+        self._pos[:] = 0
+        self.pool = KVPool(self.session, self.max_batch, self.max_seq)
+        if self._consec_restarts > self.max_restarts:
+            from repro.runtime import serving
+            if self.supervisor is not None:
+                self.supervisor.state = serving.FAILED
+            for req in survivors:
+                req.slot = -1
+                self._retire(req, streams.FAILED, exc)
+            return
+        for req in survivors:
+            req.n_generated = 0
+            req.token = 0
+            req.pos = 0
+            self._place(req)
+
+    # -- metrics ---------------------------------------------------------------
+
+    def _feed_stats(self) -> None:
+        occ = self._occ_sum / max(1, self._n_decode_steps)
+        self.stats.note_serving(
+            queue_depth=self.scheduler.depth,
+            batch_occupancy=occ,
+            tokens_per_s=self._n_streamed / max(self._busy_s, 1e-9),
+            mean_request_latency_s=self._lat_sum / max(1, self._lat_n),
+            n_tokens_streamed=self._n_streamed,
+            n_engine_restarts=self._n_restarts)

@@ -1,0 +1,74 @@
+"""Slot-paged KV cache pool for continuous batching.
+
+One device allocation for the whole engine lifetime:
+``session.init_cache(max_batch, max_seq)`` — every cache leaf carries the
+batch axis at position 1 (leaves are stacked ``[n_groups, B, ...]`` by
+``model.init_cache``; attention k/v/scales/slot_pos and SSM conv/state
+all follow). A *slot* is one batch row of that allocation. Requests
+borrow a slot for their lifetime; a retired slot goes straight back on
+the free list — no copy, no compaction — because admission overwrites
+the ENTIRE row via :meth:`scatter_prefill` (every leaf row is replaced
+from a fresh batch-1 prefill, so stale tenants can never leak into the
+next request's attention window: their slots sit masked behind
+``slot_pos`` until the row is rewritten).
+
+The scatter is one jitted, donated tree-map of
+``dynamic_update_index_in_dim(pool_leaf, row_leaf[:, 0], slot, axis=1)``
+with a traced slot index: a single compile serves every slot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_BATCH_AXIS = 1  # cache leaves are [n_groups, B, ...]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_row(pool_cache, row_cache, slot):
+    return jax.tree.map(
+        lambda pb, rb: jax.lax.dynamic_update_index_in_dim(
+            pb, rb[:, 0].astype(pb.dtype), slot, _BATCH_AXIS),
+        pool_cache, row_cache)
+
+
+class KVPool:
+    """Slot allocator over one pre-allocated batched cache."""
+
+    def __init__(self, session, max_batch: int, max_seq: int | None = None):
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq or session.cfg.max_seq)
+        self.cache = session.init_cache(self.max_batch, self.max_seq)
+        # lowest-index-first keeps slot assignment deterministic, which
+        # keeps engine runs reproducible (and replayable after a restart)
+        self._free = list(range(self.max_batch))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_slots(self) -> int:
+        return self.max_batch
+
+    def alloc(self) -> int | None:
+        """Borrow the lowest free slot; None when the pool is full."""
+        if not self._free:
+            return None
+        return self._free.pop(0)
+
+    def free(self, slot: int) -> None:
+        if not (0 <= slot < self.max_batch):
+            raise ValueError(f"slot {slot} out of range 0..{self.max_batch-1}")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
+        # keep sorted for lowest-first determinism
+        self._free.append(slot)
+        self._free.sort()
+
+    def scatter_prefill(self, slot: int, row_cache) -> None:
+        """Write a batch-1 prefilled cache into ``slot`` (all leaves)."""
+        self.cache = _scatter_row(self.cache, row_cache,
+                                  jnp.asarray(slot, jnp.int32))

@@ -1,0 +1,94 @@
+"""FCFS request queue + dynamic batch assembly for the batching engine.
+
+Admission policy is deliberately simple and deterministic: first come,
+first served, one request per free slot, assembled at decode-step
+boundaries. Requests join a running batch the step after a slot frees
+(no drain barrier: in-flight requests never wait for the newcomer's
+prefill beyond the step it is admitted in) and retire the step they
+emit their last token. Cancellation is honored lazily — a cancelled
+request still in the queue is dropped at assembly time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.runtime.batching import streams
+
+
+@dataclasses.dataclass
+class Request:
+    """One request's engine-side bookkeeping."""
+
+    request_id: int
+    prompt: np.ndarray            # [S] int32
+    gen_len: int
+    stream: streams.StreamHandle
+    submit_t: float
+    slot: int = -1
+    token: int = 0                # last generated token (next decode input)
+    pos: int = 0                  # absolute position the next decode writes
+    n_generated: int = 0          # tokens generated THIS incarnation
+    n_emitted: int = 0            # tokens delivered to the stream (monotone)
+
+    def emit(self, token: int) -> bool:
+        """Record one generated token; deliver it unless a restart replay
+        already delivered it (replays regenerate deterministically, so
+        suppressed tokens are byte-identical to the originals). Returns
+        True when the token reached the stream."""
+        self.n_generated += 1
+        self.token = int(token)
+        if self.n_generated > self.n_emitted:
+            self.stream._put(token)
+            self.n_emitted = self.n_generated
+            return True
+        return False
+
+    @property
+    def finished(self) -> bool:
+        return self.n_generated >= self.gen_len
+
+
+class FCFSScheduler:
+    """First-come-first-served queue with step-boundary batch assembly."""
+
+    def __init__(self):
+        self._queue: deque[Request] = deque()
+        self._ids = itertools.count()
+
+    def submit(self, prompt, gen_len: int) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if gen_len < 1:
+            raise ValueError(f"gen_len must be >= 1, got {gen_len}")
+        rid = next(self._ids)
+        req = Request(request_id=rid, prompt=prompt, gen_len=int(gen_len),
+                      stream=streams.StreamHandle(rid),
+                      submit_t=time.monotonic())
+        self._queue.append(req)
+        return req
+
+    @property
+    def depth(self) -> int:
+        """Queued (not yet admitted) requests, cancelled ones included —
+        they are only dropped at assembly time."""
+        return len(self._queue)
+
+    def assemble(self, n_slots: int) -> tuple[list[Request], list[Request]]:
+        """Take up to ``n_slots`` admissible requests, FCFS.
+
+        Returns (admitted, dropped): ``dropped`` are requests cancelled
+        while still queued — the caller finishes their streams."""
+        admitted, dropped = [], []
+        while self._queue and len(admitted) < n_slots:
+            req = self._queue.popleft()
+            if req.stream.cancel_requested:
+                dropped.append(req)
+            else:
+                admitted.append(req)
+        return admitted, dropped

@@ -59,7 +59,13 @@ _RETRYABLE = (TransientWorkerError, guards.BackendTransientError,
 
 @dataclasses.dataclass
 class ServeStats:
-    """Counters the health report exposes. All monotone."""
+    """Counters + gauges the health report exposes.
+
+    The ``n_*`` counters are monotone. The serving-metric gauges below
+    them are fed by the continuous-batching engine
+    (:class:`repro.runtime.batching.BatchingEngine` calls
+    :meth:`note_serving` after every decode step) and reflect the
+    current/most-recent engine run."""
 
     n_requests: int = 0
     n_ok: int = 0
@@ -70,6 +76,24 @@ class ServeStats:
     n_failed: int = 0
     n_slow_requests: int = 0
     last_error: str = ""
+    # -- engine-fed serving metrics (gauges) --------------------------------
+    n_tokens_streamed: int = 0          # monotone: tokens delivered
+    n_engine_restarts: int = 0          # monotone: restart-and-replay count
+    queue_depth: int = 0                # requests waiting for a slot
+    batch_occupancy: float = 0.0        # mean active slots per decode step
+    tokens_per_s: float = 0.0           # streamed decode throughput
+    mean_request_latency_s: float = 0.0  # submit -> done, completed requests
+
+    def note_serving(self, *, queue_depth: int, batch_occupancy: float,
+                     tokens_per_s: float, mean_request_latency_s: float,
+                     n_tokens_streamed: int, n_engine_restarts: int) -> None:
+        """Engine hook: overwrite the serving gauges in one call."""
+        self.queue_depth = queue_depth
+        self.batch_occupancy = batch_occupancy
+        self.tokens_per_s = tokens_per_s
+        self.mean_request_latency_s = mean_request_latency_s
+        self.n_tokens_streamed = n_tokens_streamed
+        self.n_engine_restarts = n_engine_restarts
 
 
 class ServingSupervisor:

@@ -1,0 +1,336 @@
+"""Continuous-batching engine: parity, lifecycle, and chaos coverage.
+
+The hard correctness bar (ISSUE 7): every request's token stream from
+:class:`repro.runtime.batching.BatchingEngine` is BYTE-identical to a
+solo batch-1 ``session.generate`` of the same prompt, regardless of
+co-batched traffic — across {xla, pallas_interpret} backends and
+{static, dynamic_a, w_group-composed} trimming configs. That only holds
+because the decode path has no cross-row coupling left: per-ROW
+activation quantization scales, per-slot causal masks over per-row
+``slot_pos``, and value-preserving dynamic plane truncation (a group's
+OR-tree count is >= every member's effective bits, so truncating to the
+count is the identity on values — counts may leak across co-batched
+rows, values cannot).
+
+Also here: ragged join/leave mid-generation, slot reuse after
+retirement, cancellation mid-stream, the ``generate`` device-side
+accumulation fix, vector-pos decode equivalence, and (chaos-marked)
+queue survival of injected ``backend.op`` / ``serve.step`` faults.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import configs
+from repro.api import session as loom
+from repro.core.policy import uniform_policy
+from repro.runtime import faults
+from repro.runtime.batching import (BatchingEngine, KVPool, StreamCancelled)
+from repro.runtime.batching import streams as streams_mod
+from repro.runtime.serving import (DEGRADED, FAILED, ServingSupervisor)
+from repro.runtime.supervisor import TransientWorkerError
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+POLICIES = {
+    "static": uniform_policy(8, 8),
+    "dynamic_a": uniform_policy(8, 8, dynamic_a=True),
+    # the acceptance combo: runtime activation trimming composed with
+    # pack-time per-filter-group weight-plane skipping
+    "w_group": uniform_policy(8, 8, dynamic_a=True, w_group=8),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_session(backend: str, policy_name: str):
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    return loom.compile(cfg, POLICIES[policy_name], mode="serve_packed",
+                        backend=backend, rng=0)
+
+
+def _prompts(cfg, n, base_len=5, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=(base_len + j,)).astype(np.int32)
+            for j in range(n)]
+
+
+def _solo(sess, prompt, gen_len):
+    return sess.generate(jnp.asarray(prompt[None, :]), gen_len)[0]
+
+
+# -- the byte-identity bar ---------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("policy_name", ["static", "dynamic_a", "w_group"])
+def test_batched_streams_byte_identical_to_solo(backend, policy_name):
+    """Mixed-length co-batched traffic == solo batch-1, bit for bit."""
+    sess = _lm_session(backend, policy_name)
+    prompts = _prompts(sess.cfg, 3)
+    gen_lens = [4, 3, 4]
+    solos = [_solo(sess, p, g) for p, g in zip(prompts, gen_lens)]
+
+    eng = BatchingEngine(sess, max_batch=4)
+    handles = [eng.submit(p, g) for p, g in zip(prompts, gen_lens)]
+    eng.run(max_steps=100)
+    for i, h in enumerate(handles):
+        np.testing.assert_array_equal(h.result(timeout=30.0), solos[i],
+                                      err_msg=f"request {i}")
+    assert eng.stats.batch_occupancy > 1.0   # traffic really was co-batched
+
+
+def test_ragged_join_and_leave_mid_generation():
+    """Requests join a RUNNING batch (staggered) and retire mid-flight
+    without disturbing co-tenants — every stream still solo-identical."""
+    sess = _lm_session("xla", "dynamic_a")
+    prompts = _prompts(sess.cfg, 4, seed=23)
+    gen_lens = [6, 2, 4, 3]                  # retire at different steps
+    solos = [_solo(sess, p, g) for p, g in zip(prompts, gen_lens)]
+
+    eng = BatchingEngine(sess, max_batch=3)  # 4 requests > 3 slots: queueing
+    handles = []
+    for p, g in zip(prompts, gen_lens):
+        handles.append(eng.submit(p, g))
+        eng.step()                           # join mid-flight, no drain
+    eng.run(max_steps=100)
+    for i, h in enumerate(handles):
+        np.testing.assert_array_equal(h.result(timeout=30.0), solos[i],
+                                      err_msg=f"request {i}")
+    assert eng.stats.n_ok == 4
+
+
+def test_slot_reuse_after_retirement():
+    """2 slots, 5 requests: slots cycle through tenants; late requests
+    land in reused (dirty) slots and still match solo exactly."""
+    sess = _lm_session("xla", "static")
+    prompts = _prompts(sess.cfg, 5, seed=31)
+    solos = [_solo(sess, p, 3) for p in prompts]
+
+    eng = BatchingEngine(sess, max_batch=2)
+    handles = [eng.submit(p, 3) for p in prompts]
+    eng.run(max_steps=200)
+    for i, h in enumerate(handles):
+        np.testing.assert_array_equal(h.result(timeout=30.0), solos[i],
+                                      err_msg=f"request {i}")
+    assert eng.pool.n_free == 2              # every slot returned
+    assert eng.stats.n_ok == 5
+
+
+def test_cancellation_mid_stream():
+    sess = _lm_session("xla", "static")
+    prompts = _prompts(sess.cfg, 2, seed=41)
+    solo_keep = _solo(sess, prompts[1], 6)
+    solo_cancelled = _solo(sess, prompts[0], 6)
+
+    eng = BatchingEngine(sess, max_batch=2)
+    h_cancel = eng.submit(prompts[0], 6)
+    h_keep = eng.submit(prompts[1], 6)
+    eng.step()
+    eng.step()
+    h_cancel.cancel()
+    eng.run(max_steps=100)
+
+    assert h_cancel.state == streams_mod.CANCELLED
+    with pytest.raises(StreamCancelled):
+        h_cancel.result(timeout=5.0)
+    got = h_cancel.tokens_so_far()
+    assert 1 <= got.size < 6                 # stopped mid-stream...
+    np.testing.assert_array_equal(got, solo_cancelled[:got.size])  # ...clean
+    # the survivor is untouched by its co-tenant's cancellation
+    np.testing.assert_array_equal(h_keep.result(timeout=30.0), solo_keep)
+
+
+def test_stream_iterator_and_cancel_from_queue():
+    sess = _lm_session("xla", "static")
+    prompts = _prompts(sess.cfg, 3, seed=47)
+    eng = BatchingEngine(sess, max_batch=1)  # 3rd request waits in queue
+    h0 = eng.submit(prompts[0], 3)
+    h1 = eng.submit(prompts[1], 3)
+    h2 = eng.submit(prompts[2], 3)
+    h2.cancel()                              # cancelled while still queued
+    eng.run(max_steps=100)
+    assert list(h0) == h0.result().tolist()  # iterator drains the stream
+    assert h1.state == streams_mod.DONE
+    assert h2.state == streams_mod.CANCELLED and h2.n_tokens == 0
+
+
+# -- pool + decode-path units ------------------------------------------------
+
+def test_kvpool_alloc_free_determinism():
+    sess = _lm_session("xla", "static")
+    pool = KVPool(sess, max_batch=3)
+    assert [pool.alloc(), pool.alloc()] == [0, 1]
+    pool.free(0)
+    assert pool.alloc() == 0                 # lowest-first, deterministic
+    assert pool.alloc() == 2 and pool.alloc() is None
+    with pytest.raises(ValueError):
+        pool.free(5)
+    pool.free(1)
+    with pytest.raises(ValueError):
+        pool.free(1)                         # double-free is loud
+
+
+def test_kvpool_scatter_prefill_writes_exact_row():
+    sess = _lm_session("xla", "static")
+    cfg = sess.cfg
+    pool = KVPool(sess, max_batch=3)
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, size=(1, 6)), jnp.int32)
+    c1 = sess.init_cache(1, pool.max_seq)
+    _, c1 = sess.prefill(tokens, cache=c1)
+    pool.scatter_prefill(1, c1)
+    import jax
+    # every leaf's slot-1 row == the batch-1 leaf (batch axis 1 throughout)
+    flat_pool = jax.tree_util.tree_leaves(pool.cache)
+    flat_one = jax.tree_util.tree_leaves(c1)
+    for pl, ol in zip(flat_pool, flat_one):
+        np.testing.assert_array_equal(np.asarray(pl[:, 1]),
+                                      np.asarray(ol[:, 0]))
+
+
+def test_vector_pos_decode_matches_scalar():
+    """decode(pos=[B] all equal) == decode(pos=scalar), bit for bit."""
+    sess = _lm_session("xla", "dynamic_a")
+    cfg = sess.cfg
+    rng = np.random.default_rng(5)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, size=(2, 6)), jnp.int32)
+    logits, cache_a = sess.prefill(tokens)
+    _, cache_b = sess.prefill(tokens)
+    tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    la, _ = sess.decode(tok, 6, cache_a)
+    lb, _ = sess.decode(tok, jnp.full((2,), 6, jnp.int32), cache_b)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_generate_accumulates_on_device_byte_identical():
+    """Satellite: generate() transfers once at the end — byte-identical
+    to the historical per-step np.asarray loop."""
+    sess = _lm_session("xla", "static")
+    cfg = sess.cfg
+    rng = np.random.default_rng(9)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, size=(2, 5)), jnp.int32)
+    got = sess.generate(tokens, 4)
+
+    # the pre-fix loop, verbatim (per-step host sync)
+    logits, cache = sess.prefill(tokens)
+    tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    out = [np.asarray(tok)]
+    for i in range(3):
+        logits, cache = sess.decode(tok, 5 + i, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+    np.testing.assert_array_equal(got, np.stack(out, axis=1))
+
+
+def test_engine_rejects_cnn_and_oversized_requests():
+    cnn = loom.compile(configs.get("paper-cnn", smoke=True),
+                       POLICIES["static"], mode="serve_packed")
+    with pytest.raises(ValueError, match="not an LM session"):
+        BatchingEngine(cnn, max_batch=2)
+    sess = _lm_session("xla", "static")
+    eng = BatchingEngine(sess, max_batch=1, max_seq=8)
+    h = eng.submit(np.arange(1, 7, dtype=np.int32), 5)   # 6 + 5 > 8
+    eng.run(max_steps=10)
+    with pytest.raises(ValueError, match="exceeds the pool's max_seq"):
+        h.result(timeout=5.0)
+
+
+def test_engine_metrics_feed_supervisor_health():
+    sess = _lm_session("xla", "static")
+    sup = ServingSupervisor(sess)
+    eng = BatchingEngine(sup, max_batch=2)
+    prompts = _prompts(sess.cfg, 2, seed=51)
+    for p in prompts:
+        eng.submit(p, 3)
+    eng.run(max_steps=100)
+    health = eng.health()
+    stats = health["stats"]
+    assert stats["n_tokens_streamed"] == 6
+    assert stats["batch_occupancy"] == pytest.approx(2.0)
+    assert stats["tokens_per_s"] > 0
+    assert stats["mean_request_latency_s"] > 0
+    assert stats["queue_depth"] == 0
+    assert health["state"] == "healthy"
+
+
+# -- chaos: a faulted step degrades the session, not the queue ---------------
+
+@pytest.mark.chaos
+def test_backend_op_fault_queue_survives():
+    """An injected backend.op transient during the engine's first prefill
+    heals via the engine's per-request retry — every queued request
+    still completes with solo-identical streams."""
+    ref = _lm_session("xla", "static")
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    # fresh guarded session: first prefill TRACES, so backend.op fires
+    guarded = loom.compile(cfg, POLICIES["static"], mode="serve_packed",
+                           backend="xla", rng=0, guarded=True)
+    prompts = _prompts(cfg, 2, seed=61)
+    solos = [_solo(ref, p, 3) for p in prompts]
+
+    from repro.api import guards
+    eng = BatchingEngine(ServingSupervisor(guarded), max_batch=2)
+    with faults.inject("backend.op", exc=guards.BackendTransientError("inj"),
+                       times=1):
+        handles = [eng.submit(p, 3) for p in prompts]
+        eng.run(max_steps=100)
+    for i, h in enumerate(handles):
+        np.testing.assert_array_equal(h.result(timeout=30.0), solos[i],
+                                      err_msg=f"request {i}")
+    assert eng.stats.n_ok == 2
+    assert eng.stats.n_retries >= 1          # the fault really fired
+
+
+@pytest.mark.chaos
+def test_decode_fault_restart_and_replay_byte_identical():
+    """A decode-step kill triggers restart-and-replay: fresh pool,
+    re-prefill, deterministic regeneration with already-delivered tokens
+    suppressed — streams stay byte-identical, supervisor degrades."""
+    sess = _lm_session("xla", "dynamic_a")
+    prompts = _prompts(sess.cfg, 2, seed=71)
+    solos = [_solo(sess, p, 5) for p in prompts]
+
+    sup = ServingSupervisor(sess)
+    eng = BatchingEngine(sup, max_batch=2)
+    handles = [eng.submit(p, 5) for p in prompts]
+    eng.step()                               # prefill + first decode, clean
+    with faults.inject("serve.step", exc=TransientWorkerError("kill"),
+                       times=1, match="decode"):
+        eng.run(max_steps=100)
+    for i, h in enumerate(handles):
+        np.testing.assert_array_equal(h.result(timeout=30.0), solos[i],
+                                      err_msg=f"request {i}")
+    assert eng.stats.n_engine_restarts == 1
+    assert sup.state == DEGRADED
+
+
+@pytest.mark.chaos
+def test_restart_exhaustion_fails_active_but_queue_serves_on():
+    """Restarts beyond max_restarts fail the ACTIVE streams loudly with
+    the typed error — but the engine keeps serving new requests."""
+    sess = _lm_session("xla", "static")
+    prompts = _prompts(sess.cfg, 2, seed=81)
+    sup = ServingSupervisor(sess)
+    eng = BatchingEngine(sup, max_batch=2, max_restarts=1)
+    h0 = eng.submit(prompts[0], 4)
+    with faults.inject("serve.step", exc=TransientWorkerError("dead"),
+                       times=None, match="decode"):
+        eng.run(max_steps=100)
+    assert h0.state == streams_mod.FAILED
+    with pytest.raises(TransientWorkerError):
+        h0.result(timeout=5.0)
+    assert sup.state == FAILED
+    # the queue survives the episode: a new request serves cleanly
+    solo = _solo(sess, prompts[1], 3)
+    h1 = eng.submit(prompts[1], 3)
+    eng.run(max_steps=100)
+    np.testing.assert_array_equal(h1.result(timeout=30.0), solo)
+    assert eng.stats.n_ok >= 1
