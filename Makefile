@@ -23,7 +23,8 @@ LINT_PATHS = src/repro/api \
              tests/test_conv_tiled.py \
              tests/test_wgroup.py \
              tests/test_faults.py \
-             tests/test_batching.py
+             tests/test_batching.py \
+             tests/test_lifecycle.py
 
 .PHONY: test test-chaos bench bench-smoke bench-check lint
 

@@ -79,7 +79,13 @@ EXACT_FIELDS = ("passes", "weight_bytes", "act_bytes", "im2col_patch_bytes",
                 # tokens/s-vs-occupancy-1 ratio rides the existing
                 # measured_speedup tracked field; absolute tokens_per_s is
                 # informational (cross-machine).
-                "occupancy", "max_batch")
+                "occupancy", "max_batch",
+                # serve_overload: admission control is deterministic by
+                # construction (submissions only enqueue; admission and
+                # shedding happen at step boundaries), so the burst
+                # geometry and the typed rejection/shed/completion counts
+                # are integer laws; drain_ms is informational wall-clock.
+                "max_queue", "burst", "n_rejected", "n_shed", "n_completed")
 
 
 def compare(baseline: dict, fresh: dict, tolerance: float,

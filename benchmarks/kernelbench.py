@@ -58,6 +58,7 @@ config only). Results are written machine-readable to BENCH_kernel.json
 """
 import argparse
 import functools
+import gc
 import json
 import os
 import sys
@@ -726,6 +727,10 @@ def bench_serve(results):
                        n_steps + 8)
             for _ in range(occ)]
         eng.step()                # admit everyone + compile the decode trace
+        gc.collect()              # keep the deterministic gen-2 GC pass over
+        #                           the earlier sections' object graph out of
+        #                           the timed window (it lands mid-window
+        #                           otherwise and smears ~10ms across steps)
         t0 = time.perf_counter()
         for _ in range(n_steps):  # nobody retires inside the timed window
             eng.step()
@@ -744,6 +749,61 @@ def bench_serve(results):
             "occupancy": occ, "max_batch": max_batch,
             "tokens_per_s": tps,
             "measured_speedup": speedup}
+
+
+def bench_serve_overload(results):
+    """Overload protection: exact shed/reject counts + drain latency.
+
+    Deterministic by construction: submissions only enter the queue
+    (admission happens at step boundaries), so a burst of
+    ``4 * max_queue`` against an idle engine yields EXACTLY
+    ``3 * max_queue`` typed ``QueueFullError`` rejections; the queued
+    remainder carries ``deadline_s=0`` and is shed — typed, before
+    prefill — on the first step. The counts are integer laws
+    (bench_compare gates them exactly); ``drain_ms``/``us`` measure how
+    fast ``drain()`` retires real traffic after the burst, which is the
+    overload-recovery latency an operator sees.
+    """
+    from repro import configs as repro_configs
+    from repro.api import guards
+    from repro.api import session as loom
+    from repro.core.policy import uniform_policy
+    from repro.runtime.batching import BatchingEngine
+
+    print("== serving overload: typed backpressure + drain latency ==")
+    cfg = repro_configs.get("qwen3-1.7b", smoke=True)
+    sess = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend="xla", rng=0)
+    rng = np.random.default_rng(17)
+    max_queue, max_batch = 4, 2
+    burst = 4 * max_queue
+    eng = BatchingEngine(sess, max_batch=max_batch, max_queue=max_queue)
+    prompt = rng.integers(1, cfg.vocab, size=(8,)).astype(np.int32)
+    n_rejected = 0
+    for _ in range(burst):
+        try:
+            eng.submit(prompt, 4, deadline_s=0.0)
+        except guards.QueueFullError:
+            n_rejected += 1
+    eng.step()                    # sheds every expired queued request
+    n_shed = eng.stats.n_shed
+    # recovery: real traffic after the burst, timed through drain()
+    handles = [eng.submit(rng.integers(1, cfg.vocab, size=(8,))
+                          .astype(np.int32), 4) for _ in range(max_batch)]
+    gc.collect()                  # same GC hygiene as bench_serve's window
+    t0 = time.perf_counter()
+    eng.drain(max_steps=1000)
+    drain_s = time.perf_counter() - t0
+    n_completed = sum(1 for h in handles if len(h.tokens_so_far()) == 4)
+    print(f"  burst={burst} vs max_queue={max_queue}: "
+          f"rejected={n_rejected} shed={n_shed} "
+          f"completed={n_completed} drain={drain_s * 1e3:.1f} ms")
+    results["serve_overload"] = {
+        "us": drain_s * 1e6, "passes": 8,
+        "max_queue": max_queue, "burst": burst,
+        "n_rejected": n_rejected, "n_shed": n_shed,
+        "n_completed": n_completed,
+        "drain_ms": drain_s * 1e3}
 
 
 def main():
@@ -765,6 +825,7 @@ def main():
     bench_conv_dynamic(results)
     bench_wgroup(results)
     bench_serve(results)
+    bench_serve_overload(results)
     payload = {"bench": "kernelbench", "note": BATCH_ENGINE_NOTE,
                "configs": results}
     # Write FIRST — a schema failure must not discard minutes of timings.

@@ -19,6 +19,11 @@ def pytest_configure(config):
         "markers",
         "chaos: deterministic fault-injection tests (runtime/faults.py); "
         "run standalone with `pytest -m chaos`")
+    config.addinivalue_line(
+        "markers",
+        "overload: serving overload/burst scenarios (bounded queue, "
+        "deadline shedding, health recovery); run with "
+        "`pytest -m overload`")
 
 
 try:  # pragma: no cover - environment probe

@@ -66,7 +66,36 @@ class AccumulatorOverflowError(NumericIntegrityError):
 
 
 class RequestTimeoutError(ServingFault):
-    """A supervised request exceeded its per-request timeout."""
+    """A supervised request exceeded its per-request timeout/deadline."""
+
+
+class StepStallError(RequestTimeoutError):
+    """A single engine decode step exceeded its watchdog deadline.
+
+    Subclasses :class:`RequestTimeoutError` so the stall rides the
+    retryable path: the batching engine routes it into restart-and-replay
+    instead of letting a hung backend freeze the whole queue.
+    """
+
+
+class QueueFullError(ServingFault):
+    """Admission refused: the engine's bounded request queue is full.
+
+    Overload backpressure, not a server fault — the caller sheds load or
+    retries later (``submit(block=True, timeout=...)`` waits for a slot
+    with a bound before raising this).
+    """
+
+
+class EngineClosedError(ServingFault):
+    """A request reached an engine that is draining or stopped, or a
+    stream was failed because the engine shut down before finishing it."""
+
+
+class ReloadMismatchError(ServingFault):
+    """A hot checkpoint swap was refused: the new param tree does not
+    match the compiled plan (tree structure / leaf shape / dtype / packed
+    weight-group counts). The engine keeps serving the old weights."""
 
 
 # Exception types/classifications a retry may heal. TimeoutError covers

@@ -138,7 +138,15 @@ def _server_prompt(cfg, args, j: int):
 def _serve_server(cfg, args, policy):
     """Continuous-batching server mode: ``--server N`` staggered requests
     through a BatchingEngine (supervised when ``--guarded``); returns the
-    per-request streams stacked [N, gen_len] for the CI stream diff."""
+    per-request streams stacked [N, gen_len] for the CI stream diff.
+
+    Lifecycle wiring: SIGINT/SIGTERM flips a stop flag checked at every
+    step boundary; the engine then runs ``shutdown(--drain-timeout)`` —
+    in-flight requests finish within the bound, residual streams fail
+    loudly with a typed ``EngineClosedError``. ``--max-queue`` /
+    ``--deadline-s`` / ``--step-timeout`` expose the overload knobs."""
+    import signal
+
     import numpy as np
     from repro.api import session as loom
     from repro.runtime.batching import BatchingEngine
@@ -146,25 +154,57 @@ def _serve_server(cfg, args, policy):
     sess = loom.compile(cfg, policy, mode=args.mode, backend=args.backend,
                         rng=0, guarded=args.guarded)
     target = sess
+    sup = None
     if args.guarded:
         from repro.runtime import ServingSupervisor
-        target = ServingSupervisor(sess)
-    eng = BatchingEngine(target, max_batch=args.batch)
+        target = sup = ServingSupervisor(sess)
+    eng = BatchingEngine(target, max_batch=args.batch,
+                         max_queue=args.max_queue,
+                         step_timeout_s=args.step_timeout)
+    stop_requested = False
+
+    def _on_signal(signum, frame):
+        nonlocal stop_requested
+        stop_requested = True
+        print(f"[serve] caught {signal.Signals(signum).name}: draining "
+              f"(bound {args.drain_timeout}s)", flush=True)
+
+    old_handlers = {s: signal.signal(s, _on_signal)
+                    for s in (signal.SIGINT, signal.SIGTERM)}
+    deadline = args.deadline_s if args.deadline_s > 0 else None
     handles = []
-    for j in range(args.server):
-        handles.append(eng.submit(_server_prompt(cfg, args, j),
-                                  args.gen_len))
-        eng.step()       # staggered joins: requests join a running batch
-    eng.run(max_steps=10_000)
-    streams = np.stack([h.result(timeout=60.0) for h in handles])
+    try:
+        for j in range(args.server):
+            handles.append(eng.submit(_server_prompt(cfg, args, j),
+                                      args.gen_len, deadline_s=deadline))
+            if stop_requested:
+                break
+            eng.step()   # staggered joins: requests join a running batch
+        while not stop_requested and eng.step():
+            pass
+        summary = eng.shutdown(args.drain_timeout)
+    finally:
+        for s, h in old_handlers.items():
+            signal.signal(s, h)
+        if sup is not None:
+            sup.close()
+    streams = np.stack([np.asarray(h.tokens_so_far()) for h in handles
+                        if len(h.tokens_so_far()) == args.gen_len]) \
+        if handles else np.zeros((0, args.gen_len), np.int32)
     st = eng.stats
     print(f"[serve] server: {args.server} requests done "
           f"state={eng.health()['state']} "
+          f"engine={eng.state} drained={summary['drained']} "
           f"occupancy={st.batch_occupancy:.2f} "
           f"tokens/s={st.tokens_per_s:.2f} "
           f"queue_depth={st.queue_depth} "
-          f"latency={st.mean_request_latency_s:.3f}s "
+          f"latency p50={st.p50_request_latency_s:.3f}s "
+          f"p95={st.p95_request_latency_s:.3f}s "
+          f"queue_wait p50={st.p50_queue_wait_s:.3f}s "
+          f"p95={st.p95_queue_wait_s:.3f}s "
           f"streamed={st.n_tokens_streamed} "
+          f"rejected={st.n_rejected} shed={st.n_shed} "
+          f"expired={st.n_deadline_expired} "
           f"restarts={st.n_engine_restarts}")
     return streams
 
@@ -238,6 +278,25 @@ def main(argv=None):
                          "slot count; request j: seed prompt-seed+j, "
                          "length prompt-len+j); prints the serving "
                          "metrics summary line")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bound the server-mode request queue; a full "
+                         "queue rejects submits with a typed "
+                         "QueueFullError (default: unbounded)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request TTL in server mode: expired-while-"
+                         "queued requests are shed before prefill, "
+                         "in-flight ones retire at the next step "
+                         "boundary (0 = no deadline)")
+    ap.add_argument("--step-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="decode-watchdog deadline per engine step; a "
+                         "stalled step restarts-and-replays instead of "
+                         "freezing the queue (default: no watchdog)")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    metavar="SECONDS",
+                    help="server-mode shutdown bound: in-flight requests "
+                         "get this long to finish before residual "
+                         "streams are failed loudly")
     ap.add_argument("--prompt-seed", type=int, default=0,
                     help="seed of the random prompt(s); lets CI "
                          "reproduce one server request's prompt in a "

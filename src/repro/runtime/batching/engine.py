@@ -3,24 +3,54 @@
 The step loop (one :meth:`step` per decode-step boundary):
 
   1. retire requests whose callers cancelled since the last step;
-  2. admit queued requests into free slots — each admission is a
-     batch-1 prefill (bit-identical to a solo prefill of the same
-     prompt) scattered into its pool slot, so running requests never
-     wait behind a drain barrier;
-  3. run ONE batched decode over the full ``max_batch``-wide pool with
+  2. retire in-flight requests whose deadline passed — typed
+     :class:`~repro.api.guards.RequestTimeoutError` on the stream,
+     partial tokens retained;
+  3. admit queued requests into free slots — expired-while-queued
+     requests are shed BEFORE prefill (typed timeout, never silent);
+     each admission is a batch-1 prefill (bit-identical to a solo
+     prefill of the same prompt) scattered into its pool slot, so
+     running requests never wait behind a drain barrier;
+  4. run ONE batched decode over the full ``max_batch``-wide pool with
      per-slot positions (``pos: [B]``) and scatter the argmax tokens to
      the per-request :class:`~repro.runtime.batching.streams.StreamHandle`
      objects; inactive rows decode garbage into their own row only, and
      admission rewrites the whole row anyway;
-  4. feed the serving gauges (queue depth, occupancy, tokens/s,
-     latency) into :class:`~repro.runtime.serving.ServeStats`.
+  5. feed the serving gauges (queue depth, occupancy, tokens/s,
+     p50/p95 latency + queue wait) into
+     :class:`~repro.runtime.serving.ServeStats`.
+
+Overload protection and lifecycle (ISSUE 9):
+
+  * **admission control** — ``max_queue`` bounds the request queue;
+    a full queue raises a typed ``QueueFullError`` (or blocks with a
+    timeout in ``submit(block=True)``); per-request ``deadline_s``
+    sheds/retires requests that can no longer be served in time.
+  * **graceful lifecycle** — the engine walks ``accepting -> draining ->
+    stopped``: :meth:`drain` stops admissions and finishes in-flight
+    work; :meth:`shutdown` drains within a wall-clock bound and then
+    fails residual streams loudly with a typed ``EngineClosedError``.
+    A step loop that dies with an unexpected exception fails every live
+    stream with the typed cause — ``result()``/iterators never hang.
+  * **decode watchdog** — ``step_timeout_s`` bounds one decode step;
+    a stuck step (chaos point ``engine.step_stall``) trips a typed
+    ``StepStallError`` and routes into restart-and-replay below, so a
+    hung backend degrades the session instead of freezing the queue.
+  * **hot checkpoint swap** — :meth:`reload` validates a new dense param
+    tree against the plan (tree/shape/dtype + packed weight-group
+    counts; :meth:`reload_checkpoint` adds CRC via the ckpt manifest)
+    and re-prefills survivors under the new weights between steps.
+    Hard bar: every post-swap token is byte-identical to what a fresh
+    engine started on the new checkpoint would emit at that position.
 
 Byte-identity: every cross-row coupling in the decode path has been
 removed (per-ROW activation quantization scales; per-slot causal masks;
 value-preserving dynamic plane truncation), so row ``r`` of the batched
 decode is bit-identical to a solo batch-1 ``session.generate`` of the
 same prompt — regardless of co-batched traffic. The parity tests in
-``tests/test_batching.py`` pin this across backends and trim configs.
+``tests/test_batching.py`` pin this across backends and trim configs,
+and the fault-free, no-deadline path is byte-identical with or without
+the watchdog (the watched call is the same computation).
 
 Fault composition (with or without a :class:`ServingSupervisor`): the
 decode jit DONATES the cache, so a fault that surfaces after execution
@@ -35,20 +65,34 @@ a faulted step degrades the session, never the engine.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import time
+from collections import deque
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import guards
+from repro.runtime import faults
 from repro.runtime.batching import streams
 from repro.runtime.batching.kvpool import KVPool
 from repro.runtime.batching.scheduler import FCFSScheduler, Request
+
+# Engine lifecycle states (see runtime/README.md for the state machine).
+ACCEPTING, DRAINING, STOPPED = "accepting", "draining", "stopped"
 
 
 def _retryable():
     from repro.runtime.serving import _RETRYABLE
     return _RETRYABLE
+
+
+def _pct(ring, q: float) -> float:
+    if not ring:
+        return 0.0
+    return float(np.percentile(np.asarray(ring, np.float64), q))
 
 
 class BatchingEngine:
@@ -59,11 +103,22 @@ class BatchingEngine:
     engine then runs the supervisor's instrumented entry points (fault
     points + numeric-integrity checks fire per step), shares its
     :class:`ServeStats`, and degrades its health state on restarts.
+
+    ``max_queue``: bound on queued requests (None = unbounded, the
+    pre-ISSUE-9 behavior). ``step_timeout_s``: decode-watchdog deadline
+    per step (None = no watchdog). ``overload_window_s``: how long after
+    the last overload event (shed / rejection / deadline expiry /
+    restart) the engine-local health stays ``degraded`` before
+    recovering.
     """
 
     def __init__(self, session, *, max_batch: int = 8,
                  max_seq: int | None = None, max_restarts: int = 2,
-                 prefill_retries: int = 2, backoff_s: float = 0.02):
+                 prefill_retries: int = 2, backoff_s: float = 0.02,
+                 max_queue: int | None = None,
+                 step_timeout_s: float | None = None,
+                 overload_window_s: float = 5.0,
+                 latency_ring: int = 512):
         from repro.runtime import serving
         if isinstance(session, serving.ServingSupervisor):
             self.supervisor = session
@@ -79,20 +134,29 @@ class BatchingEngine:
         self.max_restarts = int(max_restarts)
         self.prefill_retries = int(prefill_retries)
         self.backoff_s = float(backoff_s)
-        self.scheduler = FCFSScheduler()
+        self.step_timeout_s = step_timeout_s
+        self.overload_window_s = float(overload_window_s)
+        self.scheduler = FCFSScheduler(max_queue)
         self.pool = KVPool(self.session, self.max_batch, max_seq)
         self.max_seq = self.pool.max_seq
         self.active: dict[int, Request] = {}
+        self.state = ACCEPTING
+        self.last_drain_s = 0.0
         self._tok = np.zeros(self.max_batch, np.int32)
         self._pos = np.zeros(self.max_batch, np.int32)
+        self._watchdog: concurrent.futures.ThreadPoolExecutor | None = None
         self._n_decode_steps = 0
         self._occ_sum = 0
         self._busy_s = 0.0
         self._n_streamed = 0
         self._n_restarts = 0
         self._consec_restarts = 0
+        self._n_reloads = 0
+        self._last_overload_t = -float("inf")
         self._lat_sum = 0.0
         self._lat_n = 0
+        self._lat_ring: deque[float] = deque(maxlen=int(latency_ring))
+        self._wait_ring: deque[float] = deque(maxlen=int(latency_ring))
 
     @property
     def session(self):
@@ -102,21 +166,60 @@ class BatchingEngine:
             return self.supervisor.session
         return self._bare_session
 
+    @property
+    def max_queue(self) -> int | None:
+        return self.scheduler.max_queue
+
     # -- public surface ------------------------------------------------------
 
-    def submit(self, prompt, gen_len: int) -> streams.StreamHandle:
-        """Enqueue one request; returns its stream immediately."""
-        req = self.scheduler.submit(prompt, gen_len)
+    def submit(self, prompt, gen_len: int, *, deadline_s: float | None = None,
+               block: bool = False,
+               timeout: float | None = None) -> streams.StreamHandle:
+        """Enqueue one request; returns its stream immediately.
+
+        ``deadline_s``: per-request TTL — expired-while-queued requests
+        are shed before prefill, in-flight requests past deadline retire
+        at the next step boundary (typed ``RequestTimeoutError`` either
+        way; partial tokens stay on the stream). ``block``/``timeout``:
+        wait up to ``timeout`` seconds for a queue slot instead of
+        raising ``QueueFullError`` immediately when the bounded queue is
+        full (the engine must be stepping on another thread for a slot
+        to free).
+        """
+        if self.state != ACCEPTING:
+            raise guards.EngineClosedError(
+                f"engine is {self.state}: not accepting new requests")
+        try:
+            req = self.scheduler.submit(prompt, gen_len,
+                                        deadline_s=deadline_s,
+                                        block=block, timeout=timeout)
+        except guards.QueueFullError:
+            self.stats.n_rejected += 1
+            self._note_overload()
+            raise
         self.stats.n_requests += 1
         self.stats.queue_depth = self.scheduler.depth
         return req.stream
 
     def step(self) -> bool:
-        """One engine step (admit + one batched decode). Returns True
-        while there is work left (active slots or queued requests)."""
+        """One engine step (retire + admit + one batched decode). Returns
+        True while there is work left (active slots or queued requests).
+        An unexpected (non-healable) exception fails every live stream
+        with the typed cause before propagating — streams never hang on
+        a dead engine."""
+        try:
+            return self._step_inner()
+        except Exception as exc:  # noqa: BLE001 — healable faults already
+            #                       handled inside; anything here is fatal
+            self._fail_all(exc)
+            self._stop()
+            raise
+
+    def _step_inner(self) -> bool:
         t0 = time.monotonic()
         self._retire_cancelled()
-        self._admit()
+        self._retire_expired(t0)
+        self._admit(t0)
         if self.active:
             self._decode_once()
         self._busy_s += time.monotonic() - t0
@@ -134,16 +237,96 @@ class BatchingEngine:
                     f"({len(self.active)} active, "
                     f"{self.scheduler.depth} queued)")
 
+    # -- lifecycle: accepting -> draining -> stopped -------------------------
+
+    def drain(self, max_steps: int | None = None) -> None:
+        """Stop admissions, finish every queued + in-flight request, then
+        stop. Terminal state: ``engine.state == "stopped"`` — submits
+        afterwards raise a typed ``EngineClosedError``."""
+        if self.state == STOPPED:
+            return
+        self.state = DRAINING
+        t0 = time.monotonic()
+        self.run(max_steps=max_steps)
+        self.last_drain_s = time.monotonic() - t0
+        self._stop()
+
+    def shutdown(self, timeout: float) -> dict:
+        """Drain with a wall-clock bound; fail residual streams loudly.
+
+        Steps the engine until it drains or ``timeout`` seconds elapse;
+        any request still live at the bound is failed with a typed
+        ``EngineClosedError`` (partial tokens stay on its stream).
+        Returns ``{"drained", "n_failed_residual", "elapsed_s"}``.
+        """
+        if self.state == STOPPED:
+            return {"drained": True, "n_failed_residual": 0, "elapsed_s": 0.0}
+        self.state = DRAINING
+        t0 = time.monotonic()
+        deadline = t0 + float(timeout)
+        drained = False
+        while time.monotonic() < deadline:
+            if not self.step():
+                drained = True
+                break
+        n_residual = 0
+        if not drained:
+            exc = guards.EngineClosedError(
+                f"engine shut down after {timeout}s with work in flight")
+            n_residual = self._fail_all(exc)
+        self.last_drain_s = time.monotonic() - t0
+        self._stop()
+        return {"drained": drained, "n_failed_residual": n_residual,
+                "elapsed_s": self.last_drain_s}
+
+    def _stop(self) -> None:
+        self.state = STOPPED
+        if self._watchdog is not None:
+            # cancel_futures + no join: an abandoned (stalled) decode
+            # cannot be interrupted; its worker exits once it drains.
+            self._watchdog.shutdown(wait=False, cancel_futures=True)
+            self._watchdog = None
+
+    def _fail_all(self, exc: BaseException) -> int:
+        """Fail every live stream (active + queued) with the typed cause
+        so ``result()``/iterators never block on a dead engine."""
+        n = 0
+        for req in [self.active[s] for s in sorted(self.active)]:
+            self._retire(req, streams.FAILED, exc)
+            n += 1
+        for req in self.scheduler.drain_queue():
+            if req.stream.cancel_requested:
+                req.stream._finish(streams.CANCELLED)
+            else:
+                req.stream._finish(streams.FAILED, exc)
+                n += 1
+        self.stats.queue_depth = 0
+        self.state = STOPPED
+        return n
+
     def health(self) -> dict:
-        """Supervisor health when composed, else an engine-local view."""
+        """Supervisor health when composed, else an engine-local view:
+        ``degraded`` while a restart has ever happened or an overload
+        event (shed / rejection / deadline expiry) is within
+        ``overload_window_s``; recovers to ``healthy`` once the window
+        passes with clean serving."""
         if self.supervisor is not None:
-            return self.supervisor.health()
+            h = self.supervisor.health()
+            h["engine_state"] = self.state
+            return h
         from repro.runtime import serving
-        state = serving.DEGRADED if self._n_restarts else serving.HEALTHY
+        overloaded = (time.monotonic() - self._last_overload_t
+                      < self.overload_window_s)
+        state = serving.DEGRADED if (self._n_restarts or overloaded) \
+            else serving.HEALTHY
         return {"state": state, "backend": self.session.plan.backend.name,
-                "fallbacks": {}, "stats": dataclasses.asdict(self.stats)}
+                "engine_state": self.state, "fallbacks": {},
+                "stats": dataclasses.asdict(self.stats)}
 
     # -- request lifecycle ---------------------------------------------------
+
+    def _note_overload(self) -> None:
+        self._last_overload_t = time.monotonic()
 
     def _retire(self, req: Request, state: str,
                 error: BaseException | None = None) -> None:
@@ -153,8 +336,10 @@ class BatchingEngine:
         req.stream._finish(state, error)
         if state == streams.DONE:
             self.stats.n_ok += 1
-            self._lat_sum += time.monotonic() - req.submit_t
+            lat = time.monotonic() - req.submit_t
+            self._lat_sum += lat
             self._lat_n += 1
+            self._lat_ring.append(lat)
         elif state == streams.FAILED:
             self.stats.n_failed += 1
             self.stats.last_error = f"{type(error).__name__}: {error}"
@@ -164,13 +349,34 @@ class BatchingEngine:
                     if r.stream.cancel_requested]:
             self._retire(req, streams.CANCELLED)
 
-    def _admit(self) -> None:
-        admitted, dropped = self.scheduler.assemble(self.pool.n_free)
+    def _retire_expired(self, now: float) -> None:
+        """In-flight requests past deadline retire at this step boundary;
+        partial tokens stay available on the stream."""
+        for req in [r for r in self.active.values() if r.expired(now)]:
+            self.stats.n_deadline_expired += 1
+            self._note_overload()
+            del self.active[req.slot]
+            self.pool.free(req.slot)
+            req.stream._finish(streams.FAILED, guards.RequestTimeoutError(
+                f"request {req.request_id}: deadline exceeded in flight "
+                f"after {req.n_emitted}/{req.gen_len} tokens (partial "
+                f"tokens retained on the stream)"))
+
+    def _admit(self, now: float | None = None) -> None:
+        admitted, dropped, expired = self.scheduler.assemble(
+            self.pool.n_free, now)
         for req in dropped:
             req.stream._finish(streams.CANCELLED)
+        for req in expired:
+            self.stats.n_shed += 1
+            self._note_overload()
+            req.stream._finish(streams.FAILED, guards.RequestTimeoutError(
+                f"request {req.request_id}: deadline exceeded while queued "
+                f"— shed before prefill"))
         for req in admitted:
+            self._wait_ring.append(time.monotonic() - req.submit_t)
             self._place(req)
-        if admitted or dropped:
+        if admitted or dropped or expired:
             self.stats.queue_depth = self.scheduler.depth
 
     def _place(self, req: Request) -> None:
@@ -225,11 +431,41 @@ class BatchingEngine:
 
     # -- the batched decode step ---------------------------------------------
 
+    def _watched_decode(self):
+        """One batched decode, optionally under the watchdog's per-step
+        deadline. The watched call is the SAME computation either way
+        (fault-free numerics are byte-identical with or without the
+        watchdog); a step that exceeds ``step_timeout_s`` surfaces as a
+        typed ``StepStallError`` — the cache was donated to the stalled
+        call, so the caller routes into restart-and-replay."""
+        tok = jnp.asarray(self._tok)
+        pos = jnp.asarray(self._pos)
+        cache = self.pool.cache
+
+        def call():
+            faults.fire("engine.step_stall", detail="decode")
+            return self.session.decode(tok, pos, cache)
+
+        if self.step_timeout_s is None:
+            return call()
+        if self._watchdog is None:
+            # >1 worker so the step after an abandoned stall is not
+            # queued behind the still-draining stalled call.
+            self._watchdog = concurrent.futures.ThreadPoolExecutor(
+                max_workers=2, thread_name_prefix="engine-watchdog")
+        fut = self._watchdog.submit(call)
+        try:
+            return fut.result(timeout=self.step_timeout_s)
+        except concurrent.futures.TimeoutError:
+            # The stalled call cannot be cancelled; its worker drains in
+            # the background. The STEP times out, with a typed error.
+            raise guards.StepStallError(
+                f"decode step exceeded step_timeout_s="
+                f"{self.step_timeout_s}") from None
+
     def _decode_once(self) -> None:
         try:
-            logits, cache = self.session.decode(
-                jnp.asarray(self._tok), jnp.asarray(self._pos),
-                self.pool.cache)
+            logits, cache = self._watched_decode()
             self.pool.cache = cache
             toks = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
         except _retryable() as exc:
@@ -258,34 +494,162 @@ class BatchingEngine:
             if self.supervisor.state == serving.HEALTHY:
                 self.supervisor.state = serving.DEGRADED
 
-    def _restart(self, exc: BaseException) -> None:
-        """A decode step faulted. The decode jit donates the cache, so the
-        pool may be gone either way — rebuild it and REPLAY every active
-        request from its prompt, suppressing already-delivered tokens
-        (deterministic regeneration => the suppressed prefix is
-        byte-identical to what the streams already saw)."""
-        self._consec_restarts += 1
-        self._n_restarts += 1
-        self.stats.n_engine_restarts = self._n_restarts
-        self._degrade(exc)
+    def _replay_survivors(self) -> None:
+        """Rebuild the pool and REPLAY every active request from its
+        prompt, suppressing already-delivered tokens (deterministic
+        regeneration => the suppressed prefix is byte-identical to what
+        the streams already saw — under unchanged weights; after a hot
+        swap the suffix is the new checkpoint's stream)."""
         survivors = [self.active[s] for s in sorted(self.active)]
         self.active.clear()
         self._tok[:] = 0
         self._pos[:] = 0
         self.pool = KVPool(self.session, self.max_batch, self.max_seq)
-        if self._consec_restarts > self.max_restarts:
-            from repro.runtime import serving
-            if self.supervisor is not None:
-                self.supervisor.state = serving.FAILED
-            for req in survivors:
-                req.slot = -1
-                self._retire(req, streams.FAILED, exc)
-            return
         for req in survivors:
             req.n_generated = 0
             req.token = 0
             req.pos = 0
             self._place(req)
+
+    def _restart(self, exc: BaseException) -> None:
+        """A decode step faulted. The decode jit donates the cache, so the
+        pool may be gone either way — rebuild it and replay the
+        survivors (:meth:`_replay_survivors`)."""
+        self._consec_restarts += 1
+        self._n_restarts += 1
+        self.stats.n_engine_restarts = self._n_restarts
+        self._note_overload()
+        self._degrade(exc)
+        if self._consec_restarts > self.max_restarts:
+            from repro.runtime import serving
+            if self.supervisor is not None:
+                self.supervisor.state = serving.FAILED
+            survivors = [self.active[s] for s in sorted(self.active)]
+            self.active.clear()
+            self._tok[:] = 0
+            self._pos[:] = 0
+            self.pool = KVPool(self.session, self.max_batch, self.max_seq)
+            for req in survivors:
+                req.slot = -1
+                self._retire(req, streams.FAILED, exc)
+            return
+        self._replay_survivors()
+
+    # -- hot checkpoint swap ---------------------------------------------------
+
+    def reload(self, params, *, specs=None) -> None:
+        """Hot-swap serving weights between steps (no engine restart).
+
+        ``params``: a DENSE-layout param tree (the training/checkpoint
+        layout, as produced by ``model.init_params`` or restored by
+        ``ckpt.restore_checkpoint``); it is run through the same serving
+        conversion ``loom.compile`` uses, validated against the compiled
+        plan (tree structure, per-leaf shape/dtype, and — when the plan
+        recorded pack-time weight-group counts — count equality, since
+        those are trace-time constants a swap cannot change), and only
+        then swapped in. Survivors are re-prefilled under the new
+        weights via restart-and-replay: every token emitted after the
+        swap is byte-identical to what a fresh engine started on the new
+        checkpoint would emit at that position. A typed
+        ``ReloadMismatchError`` leaves the engine serving the old
+        weights untouched.
+        """
+        from repro.api.session import _SERVING_MODES
+        from repro.models import model as M
+        if self.state == STOPPED:
+            raise guards.EngineClosedError("engine is stopped: cannot reload")
+        plan = self.session.plan
+        if specs is None:
+            _, specs = M.init_params(jax.random.PRNGKey(0), self.session.cfg)
+        if plan.mode in _SERVING_MODES:
+            try:
+                converted, _ = M.convert_params_for_serving(
+                    params, specs, plan.policy, plan.mode)
+            except Exception as exc:  # noqa: BLE001 — conversion rejects
+                raise guards.ReloadMismatchError(
+                    f"new param tree failed the serving conversion for "
+                    f"mode={plan.mode!r}: {type(exc).__name__}: {exc}"
+                ) from exc
+        else:
+            converted = params
+        self._validate_swap(converted)
+        self._check_weight_groups(converted)
+        self.session.params = converted
+        self._n_reloads += 1
+        self.stats.n_reloads = self._n_reloads
+        self._replay_survivors()
+
+    def reload_checkpoint(self, ckpt_dir: str, step: int | None = None) -> int:
+        """Hot-swap from an on-disk checkpoint: CRC/shape/dtype-verified
+        restore (``ckpt`` manifest; corrupt steps fall back to the
+        previous good one) followed by :meth:`reload`. Returns the step
+        actually loaded."""
+        from repro.ckpt import checkpoint as ckpt
+        from repro.models import model as M
+        skel, specs = M.init_params(jax.random.PRNGKey(0), self.session.cfg)
+        if step is None:
+            params, got = ckpt.restore_latest(ckpt_dir, skel)
+            if params is None:
+                raise guards.ReloadMismatchError(
+                    f"no checkpoints found in {ckpt_dir!r}")
+        else:
+            params, got = ckpt.restore_checkpoint(ckpt_dir, step, skel)
+        self.reload(params, specs=specs)
+        return got
+
+    def _validate_swap(self, converted) -> None:
+        """New tree must match the compiled plan's param tree exactly in
+        structure, per-leaf shape, and dtype (the jit traces are keyed on
+        those; a mismatch would retrace or miscompute)."""
+        cur = jax.tree_util.tree_flatten_with_path(self.session.params)
+        new = jax.tree_util.tree_flatten_with_path(converted)
+        if cur[1] != new[1]:
+            raise guards.ReloadMismatchError(
+                "new param tree structure does not match the compiled "
+                "plan's (different layers/keys) — recompile instead of "
+                "hot-swapping")
+        for (path, c), (_, n) in zip(cur[0], new[0]):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            if tuple(np.shape(c)) != tuple(np.shape(n)):
+                raise guards.ReloadMismatchError(
+                    f"leaf {key!r}: shape {tuple(np.shape(n))} != plan's "
+                    f"{tuple(np.shape(c))}")
+            c_dt, n_dt = np.asarray(c).dtype, np.asarray(n).dtype
+            if c_dt != n_dt:
+                raise guards.ReloadMismatchError(
+                    f"leaf {key!r}: dtype {n_dt} != plan's {c_dt}")
+
+    def _check_weight_groups(self, converted) -> None:
+        """Pack-time weight-group counts are TRACE-TIME constants baked
+        into the plan — a swap that changes them silently would execute
+        the wrong plane partitions. Recompute from the new packed head
+        and require equality; a mismatch means the new checkpoint needs
+        a recompile, not a hot swap."""
+        plan = self.session.plan
+        if not getattr(plan.policy, "w_group", 0):
+            return
+        from repro.core import bitpack, weightgroups
+        named = {"lm_head": converted.get("head", {})} \
+            if isinstance(converted, dict) else {}
+        for (name, kind), lp in plan.layers.items():
+            if not lp.w_group_counts:
+                continue
+            p = named.get(name)
+            wp = p.get("w_packed") if isinstance(p, dict) else None
+            if wp is None or getattr(wp, "ndim", 0) != 3:
+                continue
+            w_bits = wp.shape[0]
+            wq = bitpack.unpack_weights(wp, w_bits)
+            counts = tuple(int(v) for v in np.asarray(
+                weightgroups.weight_group_counts(wq, w_bits, lp.w_group)))
+            if counts != lp.w_group_counts:
+                raise guards.ReloadMismatchError(
+                    f"layer {name!r} ({kind}): packed weight-group counts "
+                    f"{counts} != the plan's trace-time "
+                    f"{lp.w_group_counts} — the new checkpoint changes "
+                    f"the execution plan; recompile instead of hot-"
+                    f"swapping")
 
     # -- metrics ---------------------------------------------------------------
 
@@ -297,4 +661,8 @@ class BatchingEngine:
             tokens_per_s=self._n_streamed / max(self._busy_s, 1e-9),
             mean_request_latency_s=self._lat_sum / max(1, self._lat_n),
             n_tokens_streamed=self._n_streamed,
-            n_engine_restarts=self._n_restarts)
+            n_engine_restarts=self._n_restarts,
+            p50_request_latency_s=_pct(self._lat_ring, 50),
+            p95_request_latency_s=_pct(self._lat_ring, 95),
+            p50_queue_wait_s=_pct(self._wait_ring, 50),
+            p95_queue_wait_s=_pct(self._wait_ring, 95))

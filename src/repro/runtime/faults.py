@@ -26,6 +26,9 @@ Registered points:
                        (exc => worker kill; delay => slow step)
     serve.nan_poison   poisons supervised logits with NaN
                        (numeric-integrity guard must catch it)
+    engine.step_stall  entry of every batching-engine decode step
+                       (delay => stuck step; the watchdog's per-step
+                       deadline must trip and restart-and-replay)
     ckpt.leaf_corrupt  flips bytes of one leaf file inside a checkpoint
                        save (CRC verification must reject it on restore)
     ckpt.crash_rename  raises just before the atomic rename (a torn save
@@ -46,6 +49,7 @@ FAULT_POINTS = frozenset({
     "backend.op",
     "serve.step",
     "serve.nan_poison",
+    "engine.step_stall",
     "ckpt.leaf_corrupt",
     "ckpt.crash_rename",
 })

@@ -79,14 +79,28 @@ class ServeStats:
     # -- engine-fed serving metrics (gauges) --------------------------------
     n_tokens_streamed: int = 0          # monotone: tokens delivered
     n_engine_restarts: int = 0          # monotone: restart-and-replay count
+    n_rejected: int = 0                 # monotone: QueueFullError admissions
+    n_shed: int = 0                     # monotone: expired while queued
+    n_deadline_expired: int = 0         # monotone: expired in flight
+    n_reloads: int = 0                  # monotone: hot checkpoint swaps
     queue_depth: int = 0                # requests waiting for a slot
     batch_occupancy: float = 0.0        # mean active slots per decode step
     tokens_per_s: float = 0.0           # streamed decode throughput
     mean_request_latency_s: float = 0.0  # submit -> done, completed requests
+    # request-latency / queue-wait percentiles over a bounded ring buffer
+    # (last ~512 completions/admissions — no unbounded growth)
+    p50_request_latency_s: float = 0.0
+    p95_request_latency_s: float = 0.0
+    p50_queue_wait_s: float = 0.0
+    p95_queue_wait_s: float = 0.0
 
     def note_serving(self, *, queue_depth: int, batch_occupancy: float,
                      tokens_per_s: float, mean_request_latency_s: float,
-                     n_tokens_streamed: int, n_engine_restarts: int) -> None:
+                     n_tokens_streamed: int, n_engine_restarts: int,
+                     p50_request_latency_s: float = 0.0,
+                     p95_request_latency_s: float = 0.0,
+                     p50_queue_wait_s: float = 0.0,
+                     p95_queue_wait_s: float = 0.0) -> None:
         """Engine hook: overwrite the serving gauges in one call."""
         self.queue_depth = queue_depth
         self.batch_occupancy = batch_occupancy
@@ -94,6 +108,10 @@ class ServeStats:
         self.mean_request_latency_s = mean_request_latency_s
         self.n_tokens_streamed = n_tokens_streamed
         self.n_engine_restarts = n_engine_restarts
+        self.p50_request_latency_s = p50_request_latency_s
+        self.p95_request_latency_s = p95_request_latency_s
+        self.p50_queue_wait_s = p50_queue_wait_s
+        self.p95_queue_wait_s = p95_queue_wait_s
 
 
 class ServingSupervisor:
@@ -184,8 +202,13 @@ class ServingSupervisor:
                 "stats": dataclasses.asdict(self.stats)}
 
     def close(self):
+        """Release the timeout executor. Waits for worker threads to
+        drain (fire-and-forget shutdown leaked threads past interpreter
+        teardown); ``cancel_futures`` drops requests that never started
+        — a wedged in-flight jax call still has to drain, but nothing
+        new is admitted behind it."""
         if self._executor is not None:
-            self._executor.shutdown(wait=False)
+            self._executor.shutdown(wait=True, cancel_futures=True)
             self._executor = None
 
     # -- request engine -----------------------------------------------------

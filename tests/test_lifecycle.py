@@ -1,0 +1,470 @@
+"""Overload-safe serving lifecycle: admission, deadlines, drain, watchdog,
+hot checkpoint swap (ISSUE 9).
+
+The bars, in order of appearance:
+
+  * admission control — a full bounded queue REJECTS with a typed
+    ``QueueFullError`` (immediately, or after a bounded blocking wait);
+    deadline-expired requests are shed (queued) or retired (in flight)
+    with a typed ``RequestTimeoutError`` and partial tokens retained —
+    never a silent hang;
+  * lifecycle — ``drain()`` finishes everything then stops; submits
+    against a stopped engine raise ``EngineClosedError``;
+    ``shutdown(timeout)`` is wall-clock bounded and fails residual
+    streams loudly; a step loop that dies fails every live stream with
+    the typed cause (``result()`` never blocks forever);
+  * watchdog — a stalled decode step (``engine.step_stall``) trips the
+    per-step deadline and restarts-and-replays with byte-identical
+    replayed streams;
+  * hot swap — ``reload()`` mid-traffic yields streams byte-identical to
+    a fresh engine started on the new checkpoint; a mismatched tree is
+    refused with a typed ``ReloadMismatchError`` and the old weights
+    keep serving; ``reload_checkpoint`` rides the CRC-verified restore
+    (a corrupt newest step falls back to the previous good one);
+  * and through it all, the fault-free, no-deadline path — watchdog
+    armed or not — stays byte-identical to solo batch-1 generate across
+    xla + pallas_interpret.
+"""
+import functools
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.api import guards
+from repro.api import session as loom
+from repro.core.policy import uniform_policy
+from repro.models import model as M
+from repro.runtime import faults
+from repro.runtime.batching import BatchingEngine
+from repro.runtime.batching import engine as enginelib
+from repro.runtime.batching import streams
+from repro.runtime.batching.scheduler import FCFSScheduler
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_session(backend: str = "xla"):
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    return loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend=backend, rng=0)
+
+
+@functools.lru_cache(maxsize=None)
+def _alt_checkpoint():
+    """A second LM checkpoint (dense layout) + a session compiled on it —
+    the 'newly profiled weights' a hot swap deploys."""
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    dense, specs = M.init_params(jax.random.PRNGKey(1), cfg)
+    sess = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend="xla", params=dense, specs=specs)
+    return dense, specs, sess
+
+
+def _prompts(cfg, n, base_len=5, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=(base_len + j,)).astype(np.int32)
+            for j in range(n)]
+
+
+def _solo(sess, prompt, gen_len):
+    return np.asarray(sess.generate(jnp.asarray(prompt[None, :]), gen_len)[0])
+
+
+# -- admission control -------------------------------------------------------
+
+def test_queue_full_typed_rejection():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2, max_queue=2)
+    ps = _prompts(sess.cfg, 3)
+    eng.submit(ps[0], 2)
+    eng.submit(ps[1], 2)
+    with pytest.raises(guards.QueueFullError):
+        eng.submit(ps[2], 2)
+    assert eng.stats.n_rejected == 1
+    assert isinstance(guards.QueueFullError("x"), guards.ServingFault)
+    eng.drain()
+
+
+def test_blocking_submit_times_out_with_typed_error():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2, max_queue=1)
+    ps = _prompts(sess.cfg, 2)
+    eng.submit(ps[0], 2)
+    t0 = time.monotonic()
+    with pytest.raises(guards.QueueFullError):
+        eng.submit(ps[1], 2, block=True, timeout=0.2)
+    assert time.monotonic() - t0 >= 0.2       # it actually waited
+    assert eng.stats.n_rejected == 1
+    eng.drain()
+
+
+def test_blocking_submit_succeeds_when_assembly_frees_a_slot():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2, max_queue=1)
+    ps = _prompts(sess.cfg, 2)
+    h0 = eng.submit(ps[0], 2)
+    done = threading.Event()
+
+    def driver():
+        # step until the queue drains into slots, freeing queue space
+        while not done.wait(0.01):
+            eng.step()
+
+    t = threading.Thread(target=driver, daemon=True)
+    t.start()
+    try:
+        h1 = eng.submit(ps[1], 2, block=True, timeout=30.0)
+    finally:
+        done.set()
+        t.join()
+    eng.drain()
+    assert np.array_equal(h0.result(), _solo(sess, ps[0], 2))
+    assert np.array_equal(h1.result(), _solo(sess, ps[1], 2))
+
+
+@pytest.mark.chaos
+def test_queued_deadline_shed_before_prefill_typed():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2)
+    h = eng.submit(_prompts(sess.cfg, 1)[0], 4, deadline_s=0.0)
+    eng.step()
+    assert h.state == streams.FAILED
+    with pytest.raises(guards.RequestTimeoutError):
+        h.result(timeout=1.0)
+    assert h.n_tokens == 0                    # shed BEFORE prefill
+    assert eng.stats.n_shed == 1
+    assert eng.stats.n_failed == 0            # shed is overload, not fault
+
+
+def test_expired_head_never_blocks_request_behind_it():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=1)
+    ps = _prompts(sess.cfg, 2)
+    dead = eng.submit(ps[0], 2, deadline_s=0.0)
+    live = eng.submit(ps[1], 2)
+    eng.step()     # ONE step: the expired head must not eat the slot
+    assert dead.state == streams.FAILED
+    assert live.state in (streams.DECODING, streams.DONE)
+    eng.drain()
+    assert np.array_equal(live.result(), _solo(sess, ps[1], 2))
+
+
+@pytest.mark.chaos
+def test_inflight_deadline_retires_with_partial_tokens():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2)
+    p = _prompts(sess.cfg, 1)[0]
+    h = eng.submit(p, 6)
+    eng.step()
+    eng.step()
+    partial = list(h.tokens_so_far())
+    assert 0 < len(partial) < 6
+    # expire it deterministically at the next step boundary
+    next(iter(eng.active.values())).deadline_t = 0.0
+    eng.step()
+    assert h.state == streams.FAILED
+    with pytest.raises(guards.RequestTimeoutError, match="in flight"):
+        h.result(timeout=1.0)
+    # partial tokens retained, and they are the solo prefix
+    assert list(h.tokens_so_far()) == partial
+    assert partial == list(_solo(sess, p, 6)[:len(partial)])
+    assert eng.stats.n_deadline_expired == 1
+    assert len(eng.active) == 0 and eng.pool.n_free == 2   # slot freed
+
+
+# -- graceful lifecycle ------------------------------------------------------
+
+def test_drain_finishes_work_then_refuses_submits():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2)
+    ps = _prompts(sess.cfg, 3)
+    hs = [eng.submit(p, 3) for p in ps]
+    eng.drain()
+    assert eng.state == enginelib.STOPPED
+    assert eng.health()["engine_state"] == "stopped"
+    for h, p in zip(hs, ps):
+        assert np.array_equal(h.result(), _solo(sess, p, 3))
+    with pytest.raises(guards.EngineClosedError):
+        eng.submit(ps[0], 3)
+    assert eng.last_drain_s > 0
+
+
+@pytest.mark.chaos
+def test_shutdown_bounded_fails_residual_streams_loudly():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2)
+    ps = _prompts(sess.cfg, 4)
+    hs = [eng.submit(p, 64) for p in ps]          # far too much work
+    eng.step()                                    # some partial progress
+    t0 = time.monotonic()
+    summary = eng.shutdown(timeout=0.0)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 5.0                          # bounded wall-clock
+    assert summary["drained"] is False
+    assert summary["n_failed_residual"] == 4
+    assert eng.state == enginelib.STOPPED
+    for h in hs:
+        with pytest.raises(guards.EngineClosedError):
+            h.result(timeout=1.0)                 # typed, and NO hang
+    # partial tokens of in-flight residuals stay readable
+    assert any(h.n_tokens > 0 for h in hs)
+
+
+def test_shutdown_after_drain_is_idempotent():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2)
+    eng.drain()
+    out = eng.shutdown(timeout=1.0)
+    assert out == {"drained": True, "n_failed_residual": 0, "elapsed_s": 0.0}
+
+
+@pytest.mark.chaos
+def test_engine_death_fails_all_streams_with_typed_cause():
+    """Poisoned step loop: every live stream must fail with the cause —
+    result()/iterators never block on a dead engine."""
+    import dataclasses
+    sess = _lm_session()
+    boom = RuntimeError("poisoned beyond repair")
+
+    def poisoned(*a, **k):
+        raise boom
+
+    eng = BatchingEngine(dataclasses.replace(_lm_session(), _decode=poisoned),
+                         max_batch=2)
+    ps = _prompts(sess.cfg, 3)
+    hs = [eng.submit(p, 4) for p in ps]
+    with pytest.raises(RuntimeError, match="poisoned"):
+        eng.run(max_steps=100)
+    assert eng.state == enginelib.STOPPED
+    for h in hs:
+        assert h.state == streams.FAILED
+        with pytest.raises(RuntimeError, match="poisoned"):
+            h.result(timeout=1.0)                 # typed cause, no hang
+
+
+# -- decode watchdog ---------------------------------------------------------
+
+@pytest.mark.chaos
+def test_stalled_step_trips_watchdog_and_replays_byte_identical():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2, step_timeout_s=0.25)
+    ps = _prompts(sess.cfg, 2)
+    hs = [eng.submit(p, 4) for p in ps]
+    with faults.inject("engine.step_stall", delay=3.0, times=1) as fault:
+        eng.run(max_steps=200)
+    assert fault.fired == 1
+    assert eng.stats.n_engine_restarts == 1
+    for h, p in zip(hs, ps):
+        assert np.array_equal(h.result(), _solo(sess, p, 4))
+    assert eng.health()["state"] == "degraded"
+    eng.drain()
+
+
+@pytest.mark.chaos
+def test_persistent_stall_exhausts_max_restarts_typed():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=1, step_timeout_s=0.2,
+                         max_restarts=1)
+    h = eng.submit(_prompts(sess.cfg, 1)[0], 4)
+    with faults.inject("engine.step_stall", delay=3.0, times=None):
+        eng.run(max_steps=50)
+    with pytest.raises(guards.StepStallError):
+        h.result(timeout=1.0)
+    assert eng.stats.n_engine_restarts == 2       # 1 allowed + the fatal one
+    eng.drain()
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_fault_free_path_with_watchdog_byte_identical(backend):
+    """The watchdog arms a deadline, not a different computation: the
+    fault-free, no-deadline path is byte-identical to solo — and to the
+    pre-lifecycle engine — across backends."""
+    sess = _lm_session(backend)
+    eng = BatchingEngine(sess, max_batch=2, max_queue=8, step_timeout_s=60.0)
+    ps = _prompts(sess.cfg, 3)
+    hs = [eng.submit(p, 4) for p in ps]
+    eng.run(max_steps=300)
+    for h, p in zip(hs, ps):
+        assert np.array_equal(h.result(), _solo(sess, p, 4))
+    st = eng.stats
+    assert st.p95_request_latency_s >= st.p50_request_latency_s > 0
+    assert st.p95_queue_wait_s >= st.p50_queue_wait_s >= 0
+    assert eng.health()["stats"]["p50_request_latency_s"] > 0
+    eng.drain()
+
+
+# -- hot checkpoint swap -----------------------------------------------------
+
+@pytest.mark.chaos
+def test_reload_mid_traffic_byte_identical_to_fresh_engine():
+    sessA = _lm_session()
+    dense1, specs1, sessB = _alt_checkpoint()
+    ps = _prompts(sessA.cfg, 3)
+    soloA = [_solo(sessA, p, 6) for p in ps]
+    soloB = [_solo(sessB, p, 6) for p in ps]
+
+    eng = BatchingEngine(sessA, max_batch=2)
+    h0, h1 = eng.submit(ps[0], 6), eng.submit(ps[1], 6)
+    for _ in range(3):
+        eng.step()
+    pre0 = list(h0.tokens_so_far())
+    pre1 = len(h1.tokens_so_far())
+    assert 0 < len(pre0) < 6
+    assert pre0 == list(soloA[0][:len(pre0)])     # old weights until swap
+    eng.reload(dense1, specs=specs1)
+    h2 = eng.submit(ps[2], 6)                     # post-swap admission
+    eng.run(max_steps=300)
+    # survivors: every post-swap token == fresh-engine-on-new-checkpoint
+    r0 = np.asarray(h0.result())
+    assert list(r0[:len(pre0)]) == pre0           # delivered prefix kept
+    assert np.array_equal(r0[len(pre0):], soloB[0][len(pre0):])
+    r1 = np.asarray(h1.result())
+    assert np.array_equal(r1[pre1:], soloB[1][pre1:])
+    # fresh post-swap submission is exactly the new checkpoint's stream
+    assert np.array_equal(h2.result(), soloB[2])
+    assert eng.stats.n_reloads == 1
+    eng.drain()
+
+
+@pytest.mark.chaos
+def test_reload_mismatch_refused_typed_old_weights_keep_serving():
+    sess = _lm_session()
+    dense1, specs1, _ = _alt_checkpoint()
+    bad = jax.tree.map(lambda x: x, dense1)
+    bad["head"]["w"] = jnp.zeros((3, 3), jnp.bfloat16)
+    eng = BatchingEngine(sess, max_batch=2)
+    p = _prompts(sess.cfg, 1)[0]
+    h = eng.submit(p, 4)
+    with pytest.raises(guards.ReloadMismatchError):
+        eng.reload(bad, specs=specs1)
+    eng.run(max_steps=200)
+    assert np.array_equal(h.result(), _solo(sess, p, 4))   # old weights
+    assert eng.stats.n_reloads == 0
+
+
+@pytest.mark.chaos
+def test_reload_checkpoint_crc_corrupt_falls_back_to_good_step(tmp_path):
+    from repro.ckpt import checkpoint as ckpt
+    sessA = _lm_session()
+    dense1, specs1, sessB = _alt_checkpoint()
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, 1, dense1)
+    cfg = sessA.cfg
+    dense2, _ = M.init_params(jax.random.PRNGKey(2), cfg)
+    with faults.inject("ckpt.leaf_corrupt"):
+        ckpt.save_checkpoint(d, 2, dense2)        # newest step is corrupt
+    eng = BatchingEngine(sessA, max_batch=2)
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        got = eng.reload_checkpoint(d)
+    assert got == 1                               # fell back, CRC-verified
+    p = _prompts(cfg, 1)[0]
+    h = eng.submit(p, 4)
+    eng.run(max_steps=200)
+    assert np.array_equal(h.result(), _solo(sessB, p, 4))
+
+
+def test_reload_refused_on_stopped_engine():
+    sess = _lm_session()
+    dense1, specs1, _ = _alt_checkpoint()
+    eng = BatchingEngine(sess, max_batch=2)
+    eng.drain()
+    with pytest.raises(guards.EngineClosedError):
+        eng.reload(dense1, specs=specs1)
+
+
+# -- scheduler edge cases ----------------------------------------------------
+
+def test_cancel_while_queued_frees_the_queue_slot():
+    sched = FCFSScheduler(max_queue=1)
+    a = sched.submit([1, 2, 3], 2)
+    a.stream.cancel()
+    b = sched.submit([4, 5, 6], 2)                # purge makes room: no raise
+    assert a.stream.state == streams.CANCELLED
+    admitted, dropped, expired = sched.assemble(4)
+    assert [r.request_id for r in admitted] == [b.request_id]
+    assert dropped == [] and expired == []
+
+
+def test_assemble_full_pool_empty_queue_is_noop():
+    sched = FCFSScheduler(max_queue=4)
+    assert sched.assemble(0) == ([], [], [])      # full pool
+    assert sched.assemble(4) == ([], [], [])      # empty queue
+    assert sched.depth == 0
+
+
+def test_scheduler_expired_head_shed_without_consuming_slot():
+    sched = FCFSScheduler()
+    dead = sched.submit([1, 2], 2, deadline_s=0.0)
+    live = sched.submit([3, 4], 2)
+    admitted, dropped, expired = sched.assemble(1)   # ONE slot
+    assert [r.request_id for r in expired] == [dead.request_id]
+    assert [r.request_id for r in admitted] == [live.request_id]
+    assert dropped == []
+
+
+# -- overload burst (the CI chaos/overload row) ------------------------------
+
+@pytest.mark.chaos
+@pytest.mark.overload
+def test_overload_burst_typed_rejections_sheds_no_hangs_health_recovers():
+    """Burst 4x max_queue submissions with short deadlines: exact typed
+    rejections + sheds, zero hangs (every stream terminal within a
+    bounded wall-clock), health degraded-then-recovered."""
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2, max_queue=4,
+                         overload_window_s=0.4)
+    ps = _prompts(sess.cfg, 1)
+    burst = 4 * eng.max_queue
+    t0 = time.monotonic()
+    handles, rejected = [], 0
+    for _ in range(burst):
+        try:
+            handles.append(eng.submit(ps[0], 2, deadline_s=0.0))
+        except guards.QueueFullError:
+            rejected += 1
+    assert rejected == burst - eng.max_queue      # exactly the overflow
+    assert eng.stats.n_rejected == rejected
+    eng.step()                                    # sheds the expired queue
+    assert eng.stats.n_shed == eng.max_queue
+    assert eng.health()["state"] == "degraded"    # overload visible
+    for h in handles:                             # zero hangs: all typed
+        with pytest.raises(guards.RequestTimeoutError):
+            h.result(timeout=1.0)
+    # clean traffic + window expiry => recovered
+    h = eng.submit(ps[0], 2)
+    eng.run(max_steps=100)
+    assert np.array_equal(h.result(), _solo(sess, ps[0], 2))
+    time.sleep(eng.overload_window_s + 0.05)
+    assert eng.health()["state"] == "healthy"
+    assert time.monotonic() - t0 < 60.0           # bounded end to end
+    eng.drain()
+
+
+# -- supervisor close fix ----------------------------------------------------
+
+def test_supervisor_close_joins_worker_threads():
+    from repro.runtime import ServingSupervisor
+    sess = _lm_session()
+    sup = ServingSupervisor(sess, timeout_s=30.0)
+    p = _prompts(sess.cfg, 1)[0]
+    sup.generate(jnp.asarray(p[None, :]), 2)
+    workers = [t for t in threading.enumerate()
+               if t.name.startswith("serve-supervisor")]
+    assert workers                                # executor actually used
+    sup.close()
+    assert sup._executor is None
+    for t in workers:
+        assert not t.is_alive()                   # joined, not abandoned
+    sup.close()                                   # idempotent
