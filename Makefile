@@ -13,8 +13,10 @@ LINT_PATHS = src/repro/api \
              src/repro/core/dynamic.py \
              src/repro/core/weightgroups.py \
              src/repro/launch/serve.py \
+             src/repro/core/integrity.py \
              src/repro/runtime/faults.py \
              src/repro/runtime/serving.py \
+             src/repro/runtime/audit.py \
              src/repro/runtime/batching \
              benchmarks/kernelbench.py \
              benchmarks/bench_compare.py \
@@ -24,7 +26,8 @@ LINT_PATHS = src/repro/api \
              tests/test_wgroup.py \
              tests/test_faults.py \
              tests/test_batching.py \
-             tests/test_lifecycle.py
+             tests/test_lifecycle.py \
+             tests/test_audit.py
 
 .PHONY: test test-chaos bench bench-smoke bench-check lint
 

@@ -85,7 +85,14 @@ EXACT_FIELDS = ("passes", "weight_bytes", "act_bytes", "im2col_patch_bytes",
                 # shedding happen at step boundaries), so the burst
                 # geometry and the typed rejection/shed/completion counts
                 # are integer laws; drain_ms is informational wall-clock.
-                "max_queue", "burst", "n_rejected", "n_shed", "n_completed")
+                "max_queue", "burst", "n_rejected", "n_shed", "n_completed",
+                # serve_audit_r*: shadow-audit sampling is a deterministic
+                # counter (request n audited iff floor(n*rate) increments),
+                # so the audit/divergence counts are integer laws — and a
+                # non-zero n_divergences on the fault-free bench run is a
+                # serving bug, not noise. The throughput-vs-plain ratio
+                # rides the tracked measured_speedup field.
+                "audit_rate", "n_audits", "n_divergences")
 
 
 def compare(baseline: dict, fresh: dict, tolerance: float,

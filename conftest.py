@@ -14,6 +14,27 @@ _SRC = os.path.join(_ROOT, "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _no_fault_leaks():
+    """Test hygiene: every test starts with a clean fault registry and must
+    not leak an armed fault into the next test.
+
+    A leaked fault (an ``inject`` entered without the context manager, or a
+    bug in ``inject`` itself) would silently poison every later test in the
+    session — fail the leaking test loudly by name instead."""
+    from repro.runtime import faults
+    faults.reset()
+    yield
+    leaked = faults.active_points()
+    faults.reset()   # always restore a clean registry for the next test
+    assert not leaked, (
+        f"fault(s) still armed at test teardown: {leaked}; use "
+        f"faults.inject(...) as a context manager so arming is scoped")
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",

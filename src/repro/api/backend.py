@@ -384,6 +384,22 @@ BACKEND_OPS = ("matmul_planes", "matmul_planes_dynamic", "conv_planes",
                "conv_planes_dynamic", "dynamic_quant", "attention")
 
 
+def _silent_corrupt(out):
+    """``backend.silent_corrupt`` fault effect: wrong-but-finite values.
+
+    Reverses the last axis of the op's (primary) output — shape- and
+    dtype-preserving, deterministic, and guaranteed to change downstream
+    argmax decisions, but raising nothing and producing no NaN/Inf: the
+    corruption every loud guard is blind to. Works on tracers, so a
+    corruption injected before compile bakes into the jit cache exactly
+    like a silently-miscompiled kernel would."""
+    def flip(x):
+        return jnp.flip(x, axis=-1)
+    if isinstance(out, tuple):
+        return (flip(out[0]),) + tuple(out[1:])
+    return flip(out)
+
+
 class GuardedBackend(Backend):
     """Fault-classifying wrapper: fallback chain + numeric-integrity guards.
 
@@ -438,6 +454,30 @@ class GuardedBackend(Backend):
         """The chain member currently serving ``op``."""
         return self.chain[self._active_idx.get(op, 0)]
 
+    def quarantine(self, reason: str = "") -> int:
+        """Sticky-demote EVERY op one chain member past its current
+        substrate (the shadow auditor's response to a silent divergence:
+        the active backend returned wrong-but-finite values, so no single
+        op can be trusted and no error classification exists to react
+        to). Reuses the same per-op sticky state as fault-driven
+        fallback — ``fallback_report()`` shows the quarantine. Returns
+        the number of ops demoted (0 = chain already exhausted)."""
+        n = 0
+        for op in BACKEND_OPS:
+            i = self._active_idx.get(op, 0)
+            if i + 1 < len(self.chain):
+                nxt = self.chain[i + 1]
+                self._active_idx[op] = i + 1
+                self.fallbacks_by_op[op] = nxt.name
+                n += 1
+        if n:
+            warnings.warn(
+                f"[guarded] QUARANTINE: {self.chain[0].name!r} demoted for "
+                f"all ops ({reason or 'silent divergence'}) — serving "
+                f"continues on the fallback chain (sticky)",
+                RuntimeWarning, stacklevel=3)
+        return n
+
     def _dispatch(self, op: str, *args, **kwargs):
         from repro.runtime import faults
         start = self._active_idx.get(op, 0)
@@ -446,7 +486,11 @@ class GuardedBackend(Backend):
             b = self.chain[i]
             try:
                 faults.fire("backend.op", detail=f"{op}:{b.name}")
-                return getattr(b, op)(*args, **kwargs)
+                out = getattr(b, op)(*args, **kwargs)
+                if faults.take("backend.silent_corrupt",
+                               detail=f"{op}:{b.name}"):
+                    out = _silent_corrupt(out)
+                return out
             except Exception as exc:  # noqa: BLE001 — classified below
                 kind = guards.classify_error(exc)
                 if kind == guards.TRANSIENT:
@@ -476,6 +520,43 @@ class GuardedBackend(Backend):
                 f"— operands are incoherent")
         return k8
 
+    @staticmethod
+    def _check_w_counts(w_counts, w_group: int, n: int, w_bits: int,
+                        op: str) -> None:
+        """Pass-law precheck on the static weight-group counts: one count
+        per group of ``w_group`` output columns (sum(Pw_counts) is the
+        weight factor of Loom's pass law), every count in [1, w_bits].
+        A violation means corrupt plan metadata — the dispatch would
+        execute the wrong plane partitions, silently."""
+        if w_counts is None:
+            return
+        want = -(-n // w_group)
+        if len(w_counts) != want:
+            raise guards.BackendShapeError(
+                f"{op}: {len(w_counts)} weight-group counts for N={n} at "
+                f"w_group={w_group} (pass law needs {want} groups) — "
+                f"operands and plan metadata are incoherent")
+        bad = sorted({int(c) for c in w_counts if not 1 <= int(c) <= w_bits})
+        if bad:
+            raise guards.WeightIntegrityError(
+                f"{op}: weight-group plane counts {bad} outside "
+                f"[1, {w_bits}] — corrupt pass-law metadata; refusing to "
+                f"dispatch wrong plane partitions")
+
+    @staticmethod
+    def _check_plane_counts(counts, bits: int, op: str) -> None:
+        """Bounds check on runtime (OR-tree) plane counts — concrete
+        arrays only: inside a jit trace the check is a structural no-op,
+        so guarded tracing stays bit-transparent."""
+        if isinstance(counts, jax.core.Tracer):
+            return
+        arr = np.asarray(counts)
+        if arr.size and (int(arr.min()) < 1 or int(arr.max()) > bits):
+            raise guards.WeightIntegrityError(
+                f"{op}: runtime plane counts span "
+                f"[{int(arr.min())}, {int(arr.max())}] outside the legal "
+                f"[1, {bits}] — the OR-tree output is corrupt")
+
     # -- guarded op surface -------------------------------------------------
 
     def matmul_planes(self, xq, w_packed, *, w_bits, a_bits=8, w_counts=None,
@@ -483,6 +564,8 @@ class GuardedBackend(Backend):
         k8 = self._check_packed_k(int(xq.shape[-1]), w_packed,
                                   "matmul_planes")
         guards.check_accum_bound(k8, a_bits, w_bits, "matmul_planes")
+        self._check_w_counts(w_counts, w_group, int(w_packed.shape[-1]),
+                             w_bits, "matmul_planes")
         return self._dispatch("matmul_planes", xq, w_packed, w_bits=w_bits,
                               a_bits=a_bits, w_counts=w_counts,
                               w_group=w_group)
@@ -494,6 +577,8 @@ class GuardedBackend(Backend):
         k8 = self._check_packed_k(int(xq.shape[-1]), w_packed,
                                   "matmul_planes_dynamic")
         guards.check_accum_bound(k8, 8, w_bits, "matmul_planes_dynamic")
+        self._check_plane_counts(plane_counts, w_bits,
+                                 "matmul_planes_dynamic")
         return self._dispatch("matmul_planes_dynamic", xq, w_packed,
                               plane_counts, w_bits=w_bits, bn=bn)
 
@@ -502,6 +587,8 @@ class GuardedBackend(Backend):
         kkc = kernel * kernel * int(xq.shape[-1])
         self._check_packed_k(kkc, w_packed, "conv_planes")
         guards.check_accum_bound(kkc, a_bits, w_bits, "conv_planes")
+        self._check_w_counts(w_counts, w_group, int(w_packed.shape[-1]),
+                             w_bits, "conv_planes")
         return self._dispatch("conv_planes", xq, w_packed, kernel=kernel,
                               stride=stride, w_bits=w_bits, a_bits=a_bits,
                               conv_tile=conv_tile, w_counts=w_counts,
@@ -513,6 +600,9 @@ class GuardedBackend(Backend):
         kkc = kernel * kernel * int(xq.shape[-1])
         self._check_packed_k(kkc, w_packed, "conv_planes_dynamic")
         guards.check_accum_bound(kkc, a_bits, w_bits, "conv_planes_dynamic")
+        self._check_w_counts(w_counts, w_group, int(w_packed.shape[-1]),
+                             w_bits, "conv_planes_dynamic")
+        self._check_plane_counts(counts, a_bits, "conv_planes_dynamic")
         return self._dispatch("conv_planes_dynamic", xq, w_packed, counts,
                               kernel=kernel, stride=stride, w_bits=w_bits,
                               a_bits=a_bits, group_size=group_size,

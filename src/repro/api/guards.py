@@ -65,6 +65,20 @@ class AccumulatorOverflowError(NumericIntegrityError):
     """(Pa, Pw, K) can overflow the int32 accumulator: wrong logits."""
 
 
+class WeightIntegrityError(NumericIntegrityError):
+    """In-memory serving weights no longer match their compile-time CRC32
+    fingerprint (bit flip / bad swap). Detected by the periodic integrity
+    check (``core.integrity``); the engine self-heals by reloading the
+    last good checkpoint when one is configured, else fails loudly."""
+
+
+class SilentDivergenceError(NumericIntegrityError):
+    """A shadow-audited request's token stream diverged from the
+    reference-oracle replay (``runtime.audit``): the serving backend
+    returned wrong-but-finite values. The engine quarantines the backend
+    down the fallback chain and writes a replayable repro bundle."""
+
+
 class RequestTimeoutError(ServingFault):
     """A supervised request exceeded its per-request timeout/deadline."""
 

@@ -44,6 +44,11 @@ class ServingSession:
     _prefill: Any = None
     _decode: Any = None
     _classify: Any = None
+    # Content identity of the compiled weights (core.integrity), computed
+    # once per compile/reload for serving modes; None = not fingerprinted.
+    fingerprint: Any = None
+    # The mesh the entry points were jitted against (rejit() needs it).
+    _mesh: Any = None
 
     # -- LM entry points ----------------------------------------------------
 
@@ -95,6 +100,48 @@ class ServingSession:
         if self._classify is None:
             raise ValueError(f"{self.cfg.name}: not a CNN session")
         return self._classify(self.params, x)
+
+    # -- Integrity ----------------------------------------------------------
+
+    def verify_integrity(self, where: str = "") -> int:
+        """Re-verify the serving weights against the compile-time CRC32
+        fingerprint and the plan's pass-law count metadata (a typed
+        :class:`~repro.api.guards.WeightIntegrityError` on any mismatch).
+        Returns the number of leaves verified; 0 when the session was
+        compiled without a fingerprint (non-serving modes)."""
+        if self.fingerprint is None:
+            return 0
+        from repro.core import integrity
+        where = where or self.cfg.name
+        n = integrity.verify_params(self.params, self.fingerprint, where)
+        integrity.verify_plan_counts(self.plan, self.fingerprint, where)
+        return n
+
+    def refingerprint(self) -> None:
+        """Recompute the fingerprint from the CURRENT params/plan — only
+        legitimate after an intentional weight swap (engine reload)."""
+        from repro.core import integrity
+        self.fingerprint = integrity.fingerprint_session(self.params,
+                                                         self.plan)
+
+    def rejit(self) -> "ServingSession":
+        """Fresh jit wrappers (and therefore fresh trace caches) for the
+        same cfg/plan/params. Used after a backend quarantine: sticky
+        fallback state lives in the GuardedBackend, but an already-traced
+        entry point baked the old dispatch into its cache — re-jitting
+        forces the next call to re-trace through the degraded chain."""
+        if self._classify is not None:
+            from repro.models import cnn
+            cfg, plan = self.cfg, self.plan
+            classify = jax.jit(lambda p, x: cnn.forward(p, cfg, x, plan))
+            return dataclasses.replace(self, _classify=classify)
+        from repro.models import model as M
+        cache_specs = M.cache_spec_tree(self.cfg) \
+            if self._mesh is not None else None
+        prefill_j, decode_j = _jit_lm(self.cfg, self.plan, self._mesh,
+                                      self.specs, cache_specs)
+        return dataclasses.replace(self, _prefill=prefill_j,
+                                   _decode=decode_j)
 
     # -- Introspection ------------------------------------------------------
 
@@ -185,8 +232,11 @@ def compile(cfg, policy: Optional[PrecisionPolicy] = None,
             # traces; the hot path only ever reads plan metadata.
             plan.record_weight_groups(params)
         classify = jax.jit(lambda p, x: cnn.forward(p, cfg, x, plan))
-        return ServingSession(cfg=cfg, plan=plan, params=params, specs=specs,
+        sess = ServingSession(cfg=cfg, plan=plan, params=params, specs=specs,
                               _classify=classify)
+        if mode in _SERVING_MODES:
+            sess.refingerprint()
+        return sess
 
     from repro.models import model as M
     if params is None:
@@ -200,5 +250,8 @@ def compile(cfg, policy: Optional[PrecisionPolicy] = None,
         plan.record_weight_groups({"lm_head": params.get("head", {})})
     cache_specs = M.cache_spec_tree(cfg) if mesh is not None else None
     prefill_j, decode_j = _jit_lm(cfg, plan, mesh, specs, cache_specs)
-    return ServingSession(cfg=cfg, plan=plan, params=params, specs=specs,
-                          _prefill=prefill_j, _decode=decode_j)
+    sess = ServingSession(cfg=cfg, plan=plan, params=params, specs=specs,
+                          _prefill=prefill_j, _decode=decode_j, _mesh=mesh)
+    if mode in _SERVING_MODES:
+        sess.refingerprint()
+    return sess

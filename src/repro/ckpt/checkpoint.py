@@ -100,12 +100,20 @@ def _corrupt_one_leaf(tmp: str) -> None:
 
 
 def save_checkpoint(ckpt_dir: str, step: int, state, *, compress: str = "none",
-                    extra_meta: dict | None = None) -> str:
+                    extra_meta: dict | None = None,
+                    verify: bool = False) -> str:
     """Synchronous atomic + durable save. compress: "none" | "bf16".
 
     Every leaf file and the manifest are fsync'd, then the tmp directory,
     then (after the rename) the checkpoint directory — a crash mid-save
     can only lose the new step, never tear it or the previous one.
+
+    ``verify=True`` re-reads every leaf AFTER the atomic rename and
+    CRC32-checks it against the manifest just written: a torn/partial
+    write (bad disk, lying page cache) surfaces as a typed
+    :class:`CheckpointCorruptError` at SAVE time, not at first restore —
+    which may be arbitrarily far in the future, long after the good
+    previous checkpoint was pruned.
     """
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -142,7 +150,26 @@ def save_checkpoint(ckpt_dir: str, step: int, state, *, compress: str = "none",
         shutil.rmtree(final)
     os.rename(tmp, final)
     _fsync_path(ckpt_dir)
+    if verify:
+        _verify_saved(final, manifest)
     return final
+
+
+def _verify_saved(path: str, manifest: dict) -> None:
+    """Read-back verification: every leaf on disk must hash to the CRC32
+    recorded in the manifest that was just written."""
+    for key, meta in manifest["leaves"].items():
+        try:
+            arr = np.load(os.path.join(path, _leaf_filename(key)),
+                          allow_pickle=False)
+        except (OSError, ValueError) as exc:
+            raise CheckpointCorruptError(
+                f"save verify: leaf {key!r} unreadable after the atomic "
+                f"rename ({exc})") from exc
+        if zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            raise CheckpointCorruptError(
+                f"save verify: leaf {key!r} failed read-back CRC32 — "
+                f"torn/corrupt write caught at save time")
 
 
 def _all_steps(ckpt_dir: str) -> list[int]:
@@ -257,11 +284,12 @@ class CheckpointManager:
     """
 
     def __init__(self, ckpt_dir: str, *, every: int = 100, keep_n: int = 3,
-                 compress: str = "none"):
+                 compress: str = "none", verify: bool = False):
         self.dir = ckpt_dir
         self.every = every
         self.keep_n = keep_n
         self.compress = compress
+        self.verify = verify
         self._thread: threading.Thread | None = None
         self._async_exc: BaseException | None = None
         os.makedirs(ckpt_dir, exist_ok=True)
@@ -286,7 +314,7 @@ class CheckpointManager:
         def _write():
             try:
                 save_checkpoint(self.dir, step, host_state,
-                                compress=self.compress)
+                                compress=self.compress, verify=self.verify)
                 self._prune()
             except BaseException as exc:  # surfaced on the next wait()
                 self._async_exc = exc

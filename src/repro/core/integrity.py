@@ -1,0 +1,169 @@
+"""Content fingerprints for serving weights: detect silent in-memory corruption.
+
+Every byte-identity contract in this repo (trimmed == untrimmed, guarded
+== unguarded, batched == solo) assumes the packed weight planes a session
+was compiled with are the planes it is still serving. Nothing enforced
+that: a bit flip in device/host memory, or a buggy hot swap that slipped
+past validation, would serve wrong tokens indefinitely — finite, typed-
+error-free, and therefore invisible to every PR 6/9 guard.
+
+This module closes the *storage* half of the silent fault model (the
+*compute* half is ``repro.runtime.audit``):
+
+  * :func:`fingerprint_session` — CRC32 per param-tree leaf plus the
+    plan's pack-time weight-group count metadata, computed ONCE at
+    ``loom.compile`` / ``BatchingEngine.reload`` (host transfer + CRC:
+    cheap at smoke scale, cadence-bounded at production scale).
+  * :func:`verify_params` / :func:`verify_plan_counts` — re-hash and
+    compare; any mismatch raises a typed
+    :class:`~repro.api.guards.WeightIntegrityError` naming the leaf.
+    ``verify_plan_counts`` additionally re-checks the pass-law metadata:
+    every recorded per-filter-group plane count must sit in
+    ``[1, w_bits]`` and match the fingerprint (counts are trace-time
+    constants — drift means the compiled plan executes wrong plane
+    partitions).
+  * :func:`flip_one_bit` — the ``weights.bitflip`` fault effect: returns
+    a copy of the tree with exactly one bit flipped in the first packed
+    plane (deterministic), so chaos tests can prove detection + heal.
+
+The check never touches the value path: it reads, hashes, compares.
+Detection rides the engine's step cadence (``integrity_every``); healing
+rides the existing CRC-verified ``reload_checkpoint`` path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import numpy as np
+
+from repro.api import guards
+
+
+def _flatten_with_paths(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def _leaf_crc(leaf) -> tuple[int, tuple, str]:
+    arr = np.asarray(jax.device_get(leaf))
+    return zlib.crc32(arr.tobytes()), tuple(arr.shape), str(arr.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightFingerprint:
+    """Immutable content identity of a compiled session's weights.
+
+    ``leaves``: leaf path -> (crc32, shape, dtype) over the FULL param
+    tree (packed planes, scales, embeddings — a flip anywhere serves
+    wrong tokens). ``group_counts``: (layer name, kind) -> the plan's
+    pack-time per-filter-group plane counts (trace-time constants).
+    ``w_bits``: the policy weight width bounding every count.
+    """
+
+    leaves: dict
+    group_counts: dict
+    w_bits: int
+
+    def digest(self) -> str:
+        """Short stable hex id of the whole fingerprint (repro bundles)."""
+        acc = 0
+        for key in sorted(self.leaves):
+            crc, _, _ = self.leaves[key]
+            acc = zlib.crc32(f"{key}:{crc}".encode(), acc)
+        for key in sorted(self.group_counts):
+            acc = zlib.crc32(f"{key}:{self.group_counts[key]}".encode(), acc)
+        return f"{acc:08x}"
+
+
+def fingerprint_session(params, plan) -> WeightFingerprint:
+    """Fingerprint ``params`` + the plan's recorded weight-group counts."""
+    leaves = {key: _leaf_crc(leaf)
+              for key, leaf in _flatten_with_paths(params).items()}
+    counts = {(name, kind): lp.w_group_counts
+              for (name, kind), lp in plan.layers.items()
+              if lp.w_group_counts}
+    w_bits = max((lp.precision.w_bits for lp in plan.layers.values()),
+                 default=8)
+    return WeightFingerprint(leaves=leaves, group_counts=counts,
+                             w_bits=int(w_bits))
+
+
+def verify_params(params, fp: WeightFingerprint, where: str = "") -> int:
+    """Re-hash every leaf against ``fp``; raise a typed
+    :class:`~repro.api.guards.WeightIntegrityError` naming the first
+    mismatching leaf. Returns the number of leaves verified."""
+    current = _flatten_with_paths(params)
+    if sorted(current) != sorted(fp.leaves):
+        raise guards.WeightIntegrityError(
+            f"{where or 'params'}: tree structure changed since "
+            f"fingerprinting ({len(current)} leaves vs {len(fp.leaves)}) "
+            f"— serving weights are not the compiled weights")
+    for key in sorted(current):
+        crc, shape, dtype = _leaf_crc(current[key])
+        want_crc, want_shape, want_dtype = fp.leaves[key]
+        if (shape, dtype) != (want_shape, want_dtype):
+            raise guards.WeightIntegrityError(
+                f"{where or 'params'}: leaf {key!r} is {dtype}{shape} but "
+                f"was fingerprinted as {want_dtype}{want_shape}")
+        if crc != want_crc:
+            raise guards.WeightIntegrityError(
+                f"{where or 'params'}: leaf {key!r} failed CRC32 "
+                f"verification (crc {crc:#010x} != fingerprint "
+                f"{want_crc:#010x}) — in-memory weights are corrupt; "
+                f"refusing to serve them silently")
+    return len(current)
+
+
+def verify_plan_counts(plan, fp: WeightFingerprint, where: str = "") -> None:
+    """Pass-law metadata check: the plan's weight-group counts must match
+    the fingerprint and every count must sit in ``[1, w_bits]``."""
+    current = {(name, kind): lp.w_group_counts
+               for (name, kind), lp in plan.layers.items()
+               if lp.w_group_counts}
+    if current != fp.group_counts:
+        raise guards.WeightIntegrityError(
+            f"{where or 'plan'}: weight-group counts drifted from the "
+            f"compile-time fingerprint ({current} != {fp.group_counts}) "
+            f"— the plan would execute wrong plane partitions")
+    for (name, kind), counts in current.items():
+        bad = [c for c in counts if not 1 <= int(c) <= fp.w_bits]
+        if bad:
+            raise guards.WeightIntegrityError(
+                f"{where or 'plan'}: layer {name!r} ({kind}) has plane "
+                f"counts {bad} outside [1, {fp.w_bits}] — corrupt "
+                f"pass-law metadata")
+
+
+def flip_one_bit(params, leaf: str | None = None):
+    """``weights.bitflip`` fault effect: XOR one bit of one leaf.
+
+    Deterministic: flips bit 0 of byte 0 of ``leaf`` (default: the first
+    packed-plane leaf by sorted path, falling back to the first leaf).
+    Returns ``(corrupted_tree, leaf_key)``; the input tree is untouched
+    (jax arrays are immutable — the caller swaps the tree in).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in flat]
+    if leaf is None:
+        packed = sorted(k for k in keys if "w_packed" in k)
+        leaf = packed[0] if packed else sorted(keys)[0]
+    if leaf not in keys:
+        raise KeyError(f"no leaf {leaf!r}; have {sorted(keys)}")
+    out = []
+    for key, (_, arr) in zip(keys, flat):
+        if key == leaf:
+            host = np.array(jax.device_get(arr))
+            raw = host.view(np.uint8).reshape(-1)
+            raw[0] ^= 0x01
+            out.append(jax.device_put(host))
+        else:
+            out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), leaf

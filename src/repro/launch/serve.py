@@ -160,7 +160,10 @@ def _serve_server(cfg, args, policy):
         target = sup = ServingSupervisor(sess)
     eng = BatchingEngine(target, max_batch=args.batch,
                          max_queue=args.max_queue,
-                         step_timeout_s=args.step_timeout)
+                         step_timeout_s=args.step_timeout,
+                         audit_rate=args.audit_rate,
+                         audit_backend=args.audit_backend,
+                         integrity_every=args.integrity_every)
     stop_requested = False
 
     def _on_signal(signum, frame):
@@ -205,7 +208,11 @@ def _serve_server(cfg, args, policy):
           f"streamed={st.n_tokens_streamed} "
           f"rejected={st.n_rejected} shed={st.n_shed} "
           f"expired={st.n_deadline_expired} "
-          f"restarts={st.n_engine_restarts}")
+          f"restarts={st.n_engine_restarts} "
+          f"audits={st.n_audits} divergences={st.n_divergences} "
+          f"integrity_checks={st.n_integrity_checks} "
+          f"quarantines={st.n_quarantines} "
+          f"audit_lag_p95={st.p95_audit_lag_s:.3f}s")
     return streams
 
 
@@ -292,6 +299,22 @@ def main(argv=None):
                     help="decode-watchdog deadline per engine step; a "
                          "stalled step restarts-and-replays instead of "
                          "freezing the queue (default: no watchdog)")
+    ap.add_argument("--audit-rate", type=float, default=0.0,
+                    metavar="FRACTION",
+                    help="server-mode shadow-audit sampling rate in [0,1]: "
+                         "that fraction of completed requests is replayed "
+                         "off the hot path on the reference oracle and "
+                         "byte-compared; a divergence quarantines the "
+                         "backend and writes a replayable repro bundle "
+                         "(0 = auditing off, byte-identical serving)")
+    ap.add_argument("--audit-backend", default="xla",
+                    choices=list(backendlib.list_backends()),
+                    help="reference oracle backend for shadow audits")
+    ap.add_argument("--integrity-every", type=int, default=0, metavar="N",
+                    help="re-verify packed-weight CRC32 fingerprints every "
+                         "N engine steps; a mismatch self-heals from the "
+                         "hot checkpoint when one is armed, else fails "
+                         "loudly with WeightIntegrityError (0 = off)")
     ap.add_argument("--drain-timeout", type=float, default=30.0,
                     metavar="SECONDS",
                     help="server-mode shutdown bound: in-flight requests "

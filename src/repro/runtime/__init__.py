@@ -13,7 +13,8 @@ from repro.runtime.supervisor import (Supervisor, StepMonitor, RunState,
 __all__ = ["Supervisor", "StepMonitor", "RunState", "TransientWorkerError",
            "faults", "ServingSupervisor", "ServeStats", "serving",
            "HEALTHY", "DEGRADED", "FAILED",
-           "BatchingEngine", "StreamHandle", "batching"]
+           "BatchingEngine", "StreamHandle", "batching",
+           "ShadowAuditor", "audit"]
 
 _SERVING_EXPORTS = ("ServingSupervisor", "ServeStats", "serving",
                     "HEALTHY", "DEGRADED", "FAILED")
@@ -21,6 +22,9 @@ _SERVING_EXPORTS = ("ServingSupervisor", "ServeStats", "serving",
 # The batching engine sits on top of serving and the model stack — same
 # lazy-load treatment.
 _BATCHING_EXPORTS = ("BatchingEngine", "StreamHandle", "batching")
+
+# The shadow auditor compiles reference sessions (model stack) — lazy too.
+_AUDIT_EXPORTS = ("ShadowAuditor", "audit")
 
 
 def __getattr__(name: str):
@@ -35,4 +39,9 @@ def __getattr__(name: str):
         if name == "batching":
             return batching
         return getattr(batching, name)
+    if name in _AUDIT_EXPORTS:
+        audit = importlib.import_module("repro.runtime.audit")
+        if name == "audit":
+            return audit
+        return getattr(audit, name)
     raise AttributeError(f"module 'repro.runtime' has no attribute {name!r}")

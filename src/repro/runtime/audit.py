@@ -1,0 +1,313 @@
+"""Online shadow audit: catch silent compute corruption on live traffic.
+
+``core.integrity`` closes the *storage* half of the silent fault model
+(weights no longer being the compiled weights). This module closes the
+*compute* half: a backend op that returns wrong-but-finite values — a
+miscompiled kernel, a bad fallback, the ``backend.silent_corrupt`` chaos
+point — raises nothing, poisons no NaN, and sails through every loud
+guard while serving corrupt tokens.
+
+The :class:`ShadowAuditor` samples COMPLETED requests at a configurable
+rate and, off the hot path (at engine step boundaries, never inside the
+batched decode), deterministically replays each sampled request's prompt
+on an independently-compiled reference session (the xla oracle route by
+default — different backend object, different jit caches, same packed
+weights) and byte-compares the replay against the tokens the stream
+actually delivered:
+
+  * match      — the serving path is certified for that request
+                 (``n_audits`` counts it);
+  * divergence — a typed :class:`~repro.api.guards.SilentDivergenceError`
+                 identifying the exact request and first diverging token.
+                 The engine then QUARANTINES the serving backend through
+                 the existing sticky-fallback machinery
+                 (``GuardedBackend.quarantine`` + a re-jit so the next
+                 trace re-dispatches), degrades health, and a minimized
+                 repro bundle (.npz: prompt + served + reference tokens +
+                 plan/policy/backend fingerprint) is written with a
+                 printed one-command pytest replay.
+
+Sampling is counter-based and deterministic (request ``n`` is audited
+iff ``floor(n * rate)`` increments), so chaos tests replay exactly.
+``rate=0`` builds nothing and touches nothing: the audit-off path is
+byte-identical to an engine without an auditor. The reference session is
+built lazily on the first audit and shares the serving session's packed
+params — it must be invalidated (``invalidate_reference``) after a hot
+weight swap.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.api import guards
+
+_BUNDLE_TEST = "tests/test_audit.py -k replay_saved_bundle"
+_BUNDLE_ENV = "LOOM_AUDIT_BUNDLE"
+
+
+@dataclass
+class AuditRecord:
+    """One sampled, completed request awaiting replay."""
+
+    request_id: int
+    prompt: np.ndarray            # [S] int32
+    gen_len: int
+    served: np.ndarray            # [gen_len] int32 — what the stream got
+    done_t: float                 # completion time (audit lag anchor)
+
+
+@dataclass
+class AuditResult:
+    """Outcome of one replay (ok or the divergence details)."""
+
+    record: AuditRecord
+    ok: bool
+    ref: np.ndarray | None = None
+    diverged_at: int = -1
+    bundle_path: str | None = None
+    error: guards.SilentDivergenceError | None = None
+
+
+@dataclass
+class ShadowAuditor:
+    """Sampled reference-replay auditor for a continuous-batching engine.
+
+    ``rate``: fraction of completed requests audited (deterministic
+    counter sampling; 1.0 = every request, 0.0 = disabled). ``ref_backend``:
+    registered backend name for the reference oracle (default ``xla``).
+    ``bundle_dir``: where divergence repro bundles are written (created
+    on first divergence; default ``audit_bundles`` under the cwd).
+    """
+
+    rate: float = 0.0
+    ref_backend: str = "xla"
+    bundle_dir: str = "audit_bundles"
+    lag_ring: int = 512
+    _n_seen: int = 0
+    _pending: deque = field(default_factory=deque)
+    _lags: deque = field(default_factory=lambda: deque(maxlen=512))
+    _ref_session: object = None
+
+    def __post_init__(self):
+        self.rate = min(max(float(self.rate), 0.0), 1.0)
+        self._lags = deque(maxlen=int(self.lag_ring))
+
+    # -- sampling ------------------------------------------------------------
+
+    def observe(self, req) -> bool:
+        """Offer one COMPLETED request; True when it was sampled.
+
+        Called by the engine at retire time with a fully-streamed
+        request (``n_emitted == gen_len``). Copies the prompt and the
+        delivered tokens — the audit happens later, off the hot path."""
+        if self.rate <= 0.0:
+            return False
+        self._n_seen += 1
+        if int(self._n_seen * self.rate) <= int((self._n_seen - 1) * self.rate):
+            return False
+        self._pending.append(AuditRecord(
+            request_id=req.request_id,
+            prompt=np.asarray(req.prompt, np.int32).copy(),
+            gen_len=int(req.gen_len),
+            served=np.asarray(req.stream.tokens_so_far(), np.int32).copy(),
+            done_t=time.monotonic()))
+        return True
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def lag_p95(self) -> float:
+        """p95 of completion -> audit-verdict lag (bounded ring)."""
+        if not self._lags:
+            return 0.0
+        return float(np.percentile(np.asarray(self._lags, np.float64), 95))
+
+    # -- the reference oracle ------------------------------------------------
+
+    def invalidate_reference(self) -> None:
+        """Drop the cached reference session AND any pending records —
+        required after a hot weight swap (pending streams were produced
+        by the old weights; replaying them under the new ones would
+        false-positive)."""
+        self._ref_session = None
+        self._pending.clear()
+
+    def _reference(self, session):
+        """Lazily compile the reference session: same cfg/policy/mode and
+        the SAME packed params, but an independent plan on
+        ``ref_backend`` with fresh jit caches — an error in the serving
+        backend's lowering cannot also be in the oracle's."""
+        if self._ref_session is not None:
+            return self._ref_session
+        from repro.api import plan as planlib
+        from repro.api.session import ServingSession, _jit_lm
+        plan = session.plan
+        ref_plan = planlib.build_plan(session.cfg, plan.policy, plan.mode,
+                                      self.ref_backend, plan.conv_route)
+        # Pack-time weight-group counts are trace-time constants derived
+        # from the shared packed tensors — copy, don't recompute.
+        for (name, kind), lp in plan.layers.items():
+            if lp.w_group_counts:
+                ref_plan.layer(name, kind=kind, kernel=lp.kernel,
+                               stride=lp.stride)
+                ref_plan.set_weight_counts(name, kind, lp.w_group_counts,
+                                           lp.w_group)
+        prefill_j, decode_j = _jit_lm(session.cfg, ref_plan, None,
+                                      session.specs, None)
+        self._ref_session = ServingSession(
+            cfg=session.cfg, plan=ref_plan, params=session.params,
+            specs=session.specs, _prefill=prefill_j, _decode=decode_j)
+        return self._ref_session
+
+    # -- replay + compare ----------------------------------------------------
+
+    def audit_one(self, session, rec: AuditRecord) -> AuditResult:
+        """Replay one record on the reference oracle and byte-compare.
+
+        Raises :class:`~repro.api.guards.SilentDivergenceError` (with the
+        repro bundle already written) on mismatch."""
+        ref_sess = self._reference(session)
+        ref = np.asarray(ref_sess.generate(rec.prompt[None, :],
+                                           rec.gen_len)[0], np.int32)
+        self._lags.append(time.monotonic() - rec.done_t)
+        if rec.served.shape == ref.shape and bool(np.array_equal(rec.served,
+                                                                 ref)):
+            return AuditResult(record=rec, ok=True, ref=ref)
+        diverged_at = int(np.argmax(rec.served != ref)) \
+            if rec.served.shape == ref.shape else 0
+        bundle = self._write_bundle(session, rec, ref, diverged_at)
+        exc = guards.SilentDivergenceError(
+            f"request {rec.request_id}: served tokens diverge from the "
+            f"{self.ref_backend!r} reference replay at position "
+            f"{diverged_at} (served {rec.served[diverged_at]} != ref "
+            f"{ref[diverged_at]}) — the serving backend returned wrong-"
+            f"but-finite values; repro bundle: {bundle}")
+        exc.request_id = rec.request_id
+        exc.diverged_at = diverged_at
+        exc.ref_tokens = ref
+        exc.bundle_path = bundle
+        raise exc
+
+    def drain(self, session) -> tuple[int, list[AuditResult]]:
+        """Audit every pending record. Returns ``(n_audited, results)``;
+        divergences come back as failed :class:`AuditResult`s (the typed
+        error attached) instead of raising, so one corrupt request does
+        not mask the rest of the batch."""
+        results = []
+        n = 0
+        while self._pending:
+            rec = self._pending.popleft()
+            try:
+                results.append(self.audit_one(session, rec))
+            except guards.SilentDivergenceError as exc:
+                results.append(AuditResult(
+                    record=rec, ok=False, diverged_at=exc.diverged_at,
+                    ref=exc.ref_tokens, bundle_path=exc.bundle_path,
+                    error=exc))
+            n += 1
+        return n, results
+
+    # -- repro bundles --------------------------------------------------------
+
+    def _write_bundle(self, session, rec: AuditRecord, ref: np.ndarray,
+                      diverged_at: int) -> str:
+        """Minimized replayable divergence bundle: the one request's
+        tokens + enough plan/policy/backend identity to recompile."""
+        os.makedirs(self.bundle_dir, exist_ok=True)
+        plan = session.plan
+        pol = plan.policy
+        meta = {
+            "arch": session.cfg.name,
+            "mode": plan.mode,
+            "conv_route": plan.conv_route,
+            "backend": plan.backend.name,
+            "ref_backend": self.ref_backend,
+            "policy": {"a_bits": pol.default.a_bits,
+                       "w_bits": pol.default.w_bits,
+                       "dynamic_a": pol.dynamic_a,
+                       "group_size": pol.group_size,
+                       "w_group": pol.w_group},
+            "weights_fingerprint": session.fingerprint.digest()
+            if session.fingerprint is not None else "",
+            "params_src": "rng:0",
+            "request_id": rec.request_id,
+            "gen_len": rec.gen_len,
+            "diverged_at": diverged_at,
+        }
+        path = os.path.join(
+            self.bundle_dir,
+            f"divergence_req{rec.request_id}_{meta['weights_fingerprint'] or 'x'}.npz")
+        np.savez(path, prompt=rec.prompt, served=rec.served, ref=ref,
+                 meta=np.asarray(json.dumps(meta)))
+        print(f"[audit] DIVERGENCE on request {rec.request_id} — repro "
+              f"bundle written; replay with:\n"
+              f"  {_BUNDLE_ENV}={path} python -m pytest {_BUNDLE_TEST} -q",
+              flush=True)
+        return path
+
+
+def load_bundle(path: str) -> dict:
+    """Load a repro bundle: prompt/served/ref arrays + decoded metadata."""
+    with np.load(path) as z:
+        return {"prompt": np.asarray(z["prompt"], np.int32),
+                "served": np.asarray(z["served"], np.int32),
+                "ref": np.asarray(z["ref"], np.int32),
+                "meta": json.loads(str(z["meta"]))}
+
+
+def _resolve_cfg(name: str):
+    """Map a bundle's recorded config name back to a registry config.
+
+    ``cfg.name`` is a display name ("qwen3-smoke"), not necessarily a
+    registry id — fall back to scanning the registry for a smoke/full
+    config carrying that name."""
+    from repro import configs
+    try:
+        return configs.get(name, smoke=True)
+    except (ImportError, AttributeError):
+        pass
+    for arch in configs.ARCHS:
+        for smoke in (True, False):
+            cfg = configs.get(arch, smoke=smoke)
+            if cfg.name == name:
+                return cfg
+    raise KeyError(f"bundle arch {name!r} matches no registered config")
+
+
+def replay_bundle(path: str) -> dict:
+    """Replay a divergence bundle in one call (what the pytest repro
+    runs): recompile the REFERENCE oracle from the recorded arch/policy/
+    mode (default rng-0 params — ``params_src`` records the provenance),
+    regenerate the bundled prompt, and compare against both stored
+    streams. Returns the bundle dict plus ``regenerated`` (the fresh
+    reference tokens), ``reproduced`` (fresh reference == stored
+    reference) and ``diverged`` (stored served != stored reference)."""
+    import dataclasses as dc
+
+    from repro.api import session as loom
+    from repro.core.policy import uniform_policy
+
+    b = load_bundle(path)
+    meta = b["meta"]
+    cfg = _resolve_cfg(meta["arch"])
+    pol = meta["policy"]
+    policy = uniform_policy(pol["a_bits"], pol["w_bits"],
+                            dynamic_a=pol["dynamic_a"],
+                            w_group=pol["w_group"])
+    policy = dc.replace(policy, group_size=pol["group_size"])
+    sess = loom.compile(cfg, policy, mode=meta["mode"],
+                        backend=meta["ref_backend"], rng=0,
+                        conv_route=meta.get("conv_route", "fused"))
+    regenerated = np.asarray(
+        sess.generate(b["prompt"][None, :], meta["gen_len"])[0], np.int32)
+    b["regenerated"] = regenerated
+    b["reproduced"] = bool(np.array_equal(regenerated, b["ref"]))
+    b["diverged"] = not bool(np.array_equal(b["served"], b["ref"]))
+    return b

@@ -43,6 +43,22 @@ Overload protection and lifecycle (ISSUE 9):
     Hard bar: every post-swap token is byte-identical to what a fresh
     engine started on the new checkpoint would emit at that position.
 
+Silent-corruption defense (ISSUE 10):
+
+  * **integrity cadence** — ``integrity_every=N`` re-verifies the weight
+    CRC32 fingerprint (``core.integrity``) every N steps, BEFORE the
+    decode, so a flipped bit (chaos point ``weights.bitflip``) is
+    detected within one cadence and never serves a token; ``heal_dir``
+    self-heals through :meth:`reload_checkpoint`, else the engine fails
+    loudly with a typed ``WeightIntegrityError``.
+  * **shadow audit** — ``audit_rate=r`` samples completed requests and
+    replays them on the reference oracle (``runtime.audit``) at step
+    boundaries; a divergence (chaos point ``backend.silent_corrupt``)
+    quarantines the backend down the sticky fallback chain, re-jits the
+    session, degrades health, and writes a replayable repro bundle.
+    ``audit_rate=0`` (default) builds nothing: the step loop is the PR 9
+    loop unchanged.
+
 Byte-identity: every cross-row coupling in the decode path has been
 removed (per-ROW activation quantization scales; per-slot causal masks;
 value-preserving dynamic plane truncation), so row ``r`` of the batched
@@ -68,6 +84,7 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import time
+import warnings
 from collections import deque
 
 import jax
@@ -118,7 +135,12 @@ class BatchingEngine:
                  max_queue: int | None = None,
                  step_timeout_s: float | None = None,
                  overload_window_s: float = 5.0,
-                 latency_ring: int = 512):
+                 latency_ring: int = 512,
+                 audit_rate: float = 0.0,
+                 audit_backend: str = "xla",
+                 audit_bundle_dir: str = "audit_bundles",
+                 integrity_every: int | None = None,
+                 heal_dir: str | None = None):
         from repro.runtime import serving
         if isinstance(session, serving.ServingSupervisor):
             self.supervisor = session
@@ -157,6 +179,24 @@ class BatchingEngine:
         self._lat_n = 0
         self._lat_ring: deque[float] = deque(maxlen=int(latency_ring))
         self._wait_ring: deque[float] = deque(maxlen=int(latency_ring))
+        # -- silent-corruption defense (ISSUE 10) ---------------------------
+        # audit_rate > 0 attaches a ShadowAuditor: completed requests are
+        # sampled and replayed on the reference oracle at step boundaries.
+        # audit_rate == 0 builds NOTHING — the audit-off step loop is the
+        # PR 9 step loop, byte for byte.
+        self.auditor = None
+        if audit_rate > 0.0:
+            from repro.runtime.audit import ShadowAuditor
+            self.auditor = ShadowAuditor(rate=audit_rate,
+                                         ref_backend=audit_backend,
+                                         bundle_dir=audit_bundle_dir)
+        # integrity_every = N re-verifies the weight fingerprint every N
+        # steps (None = off); heal_dir names the checkpoint dir a
+        # violation self-heals from (else the engine fails loudly).
+        self.integrity_every = None if integrity_every in (None, 0) \
+            else int(integrity_every)
+        self.heal_dir = heal_dir
+        self._step_idx = 0
 
     @property
     def session(self):
@@ -217,11 +257,13 @@ class BatchingEngine:
 
     def _step_inner(self) -> bool:
         t0 = time.monotonic()
+        self._integrity_tick()
         self._retire_cancelled()
         self._retire_expired(t0)
         self._admit(t0)
         if self.active:
             self._decode_once()
+        self._audit_tick()
         self._busy_s += time.monotonic() - t0
         self._feed_stats()
         return bool(self.active) or self.scheduler.depth > 0
@@ -340,6 +382,8 @@ class BatchingEngine:
             self._lat_sum += lat
             self._lat_n += 1
             self._lat_ring.append(lat)
+            if self.auditor is not None:
+                self.auditor.observe(req)
         elif state == streams.FAILED:
             self.stats.n_failed += 1
             self.stats.last_error = f"{type(error).__name__}: {error}"
@@ -485,6 +529,86 @@ class BatchingEngine:
             elif req.stream.cancel_requested:
                 self._retire(req, streams.CANCELLED)
 
+    # -- silent-corruption defense (integrity cadence + shadow audit) ---------
+
+    def _integrity_tick(self) -> None:
+        """Every ``integrity_every`` steps: re-verify the weight CRC32
+        fingerprint (+ pass-law plan metadata). A violation (e.g. the
+        ``weights.bitflip`` chaos point, applied right here so the
+        corrupted planes NEVER serve a decode undetected) self-heals
+        through the existing CRC-verified :meth:`reload_checkpoint` path
+        when ``heal_dir`` is configured, else fails the engine loudly —
+        corrupt weights are never served silently either way."""
+        if self.integrity_every is None \
+                or self.session.fingerprint is None:
+            return
+        tick = self._step_idx % self.integrity_every == 0
+        self._step_idx += 1
+        if not tick:
+            return
+        if faults.take("weights.bitflip"):
+            from repro.core import integrity as integ
+            self.session.params, leaf = integ.flip_one_bit(
+                self.session.params)
+            warnings.warn(f"[chaos] weights.bitflip: flipped one bit of "
+                          f"leaf {leaf!r}", RuntimeWarning, stacklevel=2)
+        self.stats.n_integrity_checks += 1
+        try:
+            self.session.verify_integrity("engine integrity tick")
+        except guards.WeightIntegrityError as exc:
+            self._note_overload()
+            self._degrade(exc)
+            self.stats.last_error = f"{type(exc).__name__}: {exc}"
+            if self.heal_dir is None:
+                raise
+            warnings.warn(
+                f"[engine] weight integrity violation — self-healing from "
+                f"the last good checkpoint in {self.heal_dir!r} ({exc})",
+                RuntimeWarning, stacklevel=2)
+            self.reload_checkpoint(self.heal_dir)
+
+    def _audit_tick(self) -> None:
+        """Drain the shadow auditor's sampled requests (off the hot path:
+        after the batched decode, never inside it). Any divergence
+        quarantines the serving backend once — every further token comes
+        off the fallback chain — and counts in the stats; the repro
+        bundle was already written by the auditor."""
+        if self.auditor is None or not self.auditor.n_pending:
+            return
+        n, results = self.auditor.drain(self.session)
+        self.stats.n_audits += n
+        failures = [r for r in results if not r.ok]
+        if failures:
+            self.stats.n_divergences += len(failures)
+            self._quarantine(failures[0].error)
+
+    def _quarantine(self, exc: BaseException) -> None:
+        """Silent divergence response: sticky-demote the serving backend
+        (``GuardedBackend.quarantine``), re-jit the session so the next
+        trace re-dispatches through the degraded chain, and replay the
+        survivors — their post-quarantine suffix comes from the trusted
+        substrate. Unguarded sessions cannot demote a backend; health
+        still degrades and the divergence stays counted + bundled."""
+        self.stats.n_quarantines += 1
+        self.stats.last_error = f"{type(exc).__name__}: {exc}"
+        self._note_overload()
+        self._degrade(exc)
+        be = self.session.plan.backend
+        if hasattr(be, "quarantine"):
+            be.quarantine(str(exc))
+        self._rejit_session()
+        self._replay_survivors()
+
+    def _rejit_session(self) -> None:
+        """Swap in fresh jit wrappers for the current session (same
+        cfg/plan/params) — re-instrumented when supervised, so the fault
+        points and numeric-integrity checks stay attached."""
+        fresh = self.session.rejit()
+        if self.supervisor is not None:
+            self.supervisor._session = self.supervisor._instrument(fresh)
+        else:
+            self._bare_session = fresh
+
     # -- restart-and-replay ----------------------------------------------------
 
     def _degrade(self, exc: BaseException) -> None:
@@ -575,6 +699,13 @@ class BatchingEngine:
         self._validate_swap(converted)
         self._check_weight_groups(converted)
         self.session.params = converted
+        # The swap is intentional: re-anchor the integrity fingerprint to
+        # the new weights, and drop the auditor's reference session +
+        # pending records (they were produced by the old weights).
+        if self.session.fingerprint is not None:
+            self.session.refingerprint()
+        if self.auditor is not None:
+            self.auditor.invalidate_reference()
         self._n_reloads += 1
         self.stats.n_reloads = self._n_reloads
         self._replay_survivors()
@@ -665,4 +796,6 @@ class BatchingEngine:
             p50_request_latency_s=_pct(self._lat_ring, 50),
             p95_request_latency_s=_pct(self._lat_ring, 95),
             p50_queue_wait_s=_pct(self._wait_ring, 50),
-            p95_queue_wait_s=_pct(self._wait_ring, 95))
+            p95_queue_wait_s=_pct(self._wait_ring, 95),
+            p95_audit_lag_s=self.auditor.lag_p95()
+            if self.auditor is not None else 0.0)

@@ -33,10 +33,23 @@ Registered points:
                        save (CRC verification must reject it on restore)
     ckpt.crash_rename  raises just before the atomic rename (a torn save
                        must never shadow the previous good checkpoint)
+    weights.bitflip    flips one bit of an in-memory packed weight plane
+                       at the engine's integrity tick (the CRC
+                       fingerprint check must detect it within one
+                       cadence and self-heal via reload_checkpoint)
+    backend.silent_corrupt
+                       perturbs a GuardedBackend op's output WITHOUT
+                       raising (detail = "<op>:<backend name>") — the
+                       silent half of the fault model; only the shadow
+                       auditor (runtime/audit.py) can catch it
 
 The registry is intentionally small: every point here has a chaos test
 proving the fault either heals (retry / fallback / previous checkpoint)
-or fails loudly with a typed error — never a silent wrong answer.
+or fails loudly with a typed error — never a silent wrong answer. The
+two ``silent`` points above are the exception that proves the rule:
+they corrupt *values* rather than raising, and exist to prove the
+integrity/audit layer turns silent corruption into typed, healable
+faults.
 """
 from __future__ import annotations
 
@@ -52,6 +65,8 @@ FAULT_POINTS = frozenset({
     "engine.step_stall",
     "ckpt.leaf_corrupt",
     "ckpt.crash_rename",
+    "weights.bitflip",
+    "backend.silent_corrupt",
 })
 
 
@@ -114,6 +129,13 @@ def active(point: str) -> Fault | None:
     """The live fault at ``point``, or None."""
     _check_point(point)
     return _ACTIVE.get(point)
+
+
+def active_points() -> tuple[str, ...]:
+    """Names of every point with a live fault (test-hygiene check: the
+    autouse conftest fixture fails a test that leaks one)."""
+    with _LOCK:
+        return tuple(sorted(_ACTIVE))
 
 
 def take(point: str, detail: str = "") -> bool:

@@ -1,0 +1,390 @@
+"""Silent-corruption defense: integrity fingerprints, shadow audit,
+quarantine + self-heal (ISSUE 10).
+
+The silent fault model has two halves, and every test here attacks one:
+
+  * storage — in-memory packed weights drift from the compiled weights
+    (``weights.bitflip``). The CRC32 fingerprint taken at compile time
+    re-verifies on the engine's integrity cadence; a flip is detected
+    within one cadence, surfaces as a typed ``WeightIntegrityError``,
+    and self-heals from the hot checkpoint when one is armed — post-heal
+    streams are byte-identical to an uncorrupted run.
+  * compute — a backend op returns wrong-but-finite values
+    (``backend.silent_corrupt``: fires at trace time, so the corruption
+    is baked into the jit cache like a miscompiled kernel). No loud
+    guard can see it; the shadow auditor catches it by replaying sampled
+    completed requests on the unguarded reference oracle and
+    byte-comparing. A divergence quarantines the serving backend
+    (sticky fallback + re-jit), degrades health, and writes a repro
+    bundle replayable in one pytest command.
+
+Plus the cheap always-on lattice: per-dispatch plane-count prechecks on
+the guarded path, and checkpoint ``save(verify=True)`` read-back.
+"""
+import functools
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.api import backend as backendlib
+from repro.api import guards
+from repro.api import session as loom
+from repro.core import integrity
+from repro.core.policy import uniform_policy
+from repro.ckpt import checkpoint as ckpt
+from repro.models import model as M
+from repro.runtime import faults
+from repro.runtime.audit import ShadowAuditor, load_bundle, replay_bundle
+from repro.runtime.batching import BatchingEngine
+
+pytestmark = pytest.mark.chaos
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_session(backend: str = "xla"):
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    return loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend=backend, rng=0)
+
+
+@functools.lru_cache(maxsize=None)
+def _cnn_session():
+    cfg = configs.get("paper-cnn", smoke=True)
+    return loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend="xla", rng=0)
+
+
+def _prompts(cfg, n, base_len=6, seed=13):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=(base_len + j,)).astype(np.int32)
+            for j in range(n)]
+
+
+def _solo(sess, prompt, gen_len):
+    return np.asarray(sess.generate(jnp.asarray(prompt[None, :]), gen_len)[0])
+
+
+def _run_all(eng):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        while eng.step():
+            pass
+        eng.shutdown(30.0)
+
+
+@pytest.fixture(scope="module")
+def heal_dir(tmp_path_factory):
+    """Dense rng-0 checkpoint matching _lm_session's weights (saved once)."""
+    path = str(tmp_path_factory.mktemp("heal"))
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    dense, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    ckpt.save_checkpoint(path, 0, dense, verify=True)
+    return path
+
+
+# -- storage half: fingerprints + weights.bitflip ---------------------------
+
+def test_fingerprint_detects_single_bitflip():
+    sess = _lm_session()
+    assert sess.fingerprint is not None
+    n = sess.verify_integrity("clean")
+    assert n == len(sess.fingerprint.leaves) > 0
+    corrupt, leaf = integrity.flip_one_bit(sess.params)
+    try:
+        sess.params = corrupt
+        with pytest.raises(guards.WeightIntegrityError) as ei:
+            sess.verify_integrity("flipped")
+        assert leaf in str(ei.value)               # names the exact leaf
+        assert isinstance(ei.value, guards.NumericIntegrityError)
+    finally:
+        # flip_one_bit is an involution: unflip restores the clean tree
+        sess.params, _ = integrity.flip_one_bit(sess.params, leaf=leaf)
+    assert sess.verify_integrity("restored") == n
+
+
+def test_fingerprint_covers_cnn_sessions_and_plan_counts():
+    sess = _cnn_session()
+    assert sess.fingerprint is not None
+    assert sess.fingerprint.group_counts          # pack-time counts recorded
+    assert sess.verify_integrity("cnn") > 0
+    # count-drift half: a tampered plan count is flagged too
+    fp = sess.fingerprint
+    (name, kind), counts = next(iter(fp.group_counts.items()))
+    sess.plan.set_weight_counts(name, kind, [c + 1 for c in counts])
+    try:
+        with pytest.raises(guards.WeightIntegrityError):
+            sess.verify_integrity("count drift")
+    finally:
+        sess.plan.set_weight_counts(name, kind, counts)
+    assert sess.verify_integrity("counts restored") > 0
+
+
+def test_engine_bitflip_detected_and_self_healed(heal_dir):
+    ref = _lm_session()
+    prompts = _prompts(ref.cfg, 3)
+    clean = [_solo(ref, p, 4) for p in prompts]
+
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    sess = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend="xla", rng=0)
+    eng = BatchingEngine(sess, max_batch=2, integrity_every=1,
+                         heal_dir=heal_dir)
+    handles = [eng.submit(p, 4) for p in prompts]
+    with faults.inject("weights.bitflip", times=1):
+        _run_all(eng)
+    st = eng.stats
+    assert st.n_integrity_checks > 0
+    assert st.n_reloads == 1                       # healed exactly once
+    # the flip happened at an integrity tick BEFORE decode, was caught on
+    # the same tick, and the engine replayed — so every stream is
+    # byte-identical to an uncorrupted run: no corrupt token ever served
+    for h, c in zip(handles, clean):
+        assert np.array_equal(np.asarray(h.tokens_so_far()), c)
+
+
+def test_engine_bitflip_without_heal_dir_fails_loudly():
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    sess = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend="xla", rng=0)
+    eng = BatchingEngine(sess, max_batch=2, integrity_every=1)
+    h = eng.submit(_prompts(cfg, 1)[0], 4)
+    with faults.inject("weights.bitflip", times=1):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with pytest.raises(guards.WeightIntegrityError):
+                while eng.step():
+                    pass
+    assert eng.stats.n_integrity_checks >= 1
+    assert "WeightIntegrityError" in (eng.stats.last_error or "")
+
+
+# -- compute half: backend.silent_corrupt + shadow audit --------------------
+
+def _corrupted_engine(tmp_path, rate=1.0):
+    """A guarded pallas_interpret session whose INNER backend is silently
+    corrupted (trace-time fault -> baked into the jit cache), plus an
+    engine auditing at ``rate`` against the clean unguarded xla oracle."""
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    sess = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend="pallas_interpret", rng=0, guarded=True)
+    eng = BatchingEngine(sess, max_batch=2, audit_rate=rate,
+                         audit_backend="xla",
+                         audit_bundle_dir=str(tmp_path / "bundles"))
+    return cfg, sess, eng
+
+
+def test_silent_corruption_audited_quarantined_bundled(tmp_path):
+    ref = _lm_session()
+    prompts = _prompts(ref.cfg, 4)
+    clean = [_solo(ref, p, 4) for p in prompts]
+
+    with faults.inject("backend.silent_corrupt", times=None,
+                       match=":pallas_interpret"):
+        cfg, sess, eng = _corrupted_engine(tmp_path)
+        handles = [eng.submit(p, 4) for p in prompts]
+        _run_all(eng)
+
+    st = eng.stats
+    assert st.n_audits == len(prompts)
+    assert st.n_divergences >= 1                  # the corruption was seen
+    assert st.n_quarantines >= 1
+    # quarantine went through the sticky-fallback machinery: every op
+    # demoted off the corrupted inner backend
+    be = sess.plan.backend
+    assert set(be.fallbacks_by_op) == set(backendlib.BACKEND_OPS)
+    assert all(name == "xla" for name in be.fallbacks_by_op.values())
+    # post-quarantine serving is byte-identical to the clean oracle
+    # (restart-and-replay re-served the survivors on the fallback)
+    post = [np.asarray(h.tokens_so_far()) for h in handles]
+    assert any(np.array_equal(p, c) for p, c in zip(post, clean))
+    # a repro bundle was written and replays: the stored served stream
+    # diverges from the reference, and a fresh oracle reproduces the
+    # stored reference exactly
+    bundles = sorted((tmp_path / "bundles").glob("*.npz"))
+    assert bundles, "divergence produced no repro bundle"
+    b = replay_bundle(str(bundles[0]))
+    assert b["diverged"] and b["reproduced"]
+    assert b["meta"]["params_src"] == "rng:0"
+    assert b["meta"]["backend"].startswith("guarded:")
+    health = eng.health()
+    assert health["stats"]["n_divergences"] == st.n_divergences
+    assert health["stats"]["n_quarantines"] == st.n_quarantines
+
+
+def test_audit_clean_path_byte_identical_and_counted():
+    ref = _lm_session()
+    prompts = _prompts(ref.cfg, 3)
+    clean = [_solo(ref, p, 4) for p in prompts]
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    sess = loom.compile(cfg, uniform_policy(8, 8), mode="serve_packed",
+                        backend="xla", rng=0)
+    eng = BatchingEngine(sess, max_batch=2, audit_rate=1.0)
+    handles = [eng.submit(p, 4) for p in prompts]
+    _run_all(eng)
+    st = eng.stats
+    assert st.n_audits == len(prompts)
+    assert st.n_divergences == 0
+    assert st.n_quarantines == 0
+    assert st.p95_audit_lag_s >= 0.0
+    for h, c in zip(handles, clean):
+        assert np.array_equal(np.asarray(h.tokens_so_far()), c)
+
+
+def test_audit_rate_zero_builds_nothing():
+    cfg = configs.get("qwen3-1.7b", smoke=True)
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2)          # audit off (default)
+    assert eng.auditor is None                       # zero hot-path surface
+    h = eng.submit(_prompts(cfg, 1)[0], 3)
+    _run_all(eng)
+    assert eng.stats.n_audits == 0
+    assert len(h.tokens_so_far()) == 3
+
+
+def test_audit_sampler_is_deterministic_counter():
+    class _Req:
+        def __init__(self, i):
+            self.request_id = i
+            self.prompt = np.arange(4, dtype=np.int32)
+            self.gen_len = 2
+            self.stream = self
+
+        def tokens_so_far(self):
+            return np.zeros(2, np.int32)
+
+    aud = ShadowAuditor(rate=0.5)
+    picks = [aud.observe(_Req(i)) for i in range(1, 9)]
+    assert picks == [False, True] * 4                # every 2nd, exactly
+    assert ShadowAuditor(rate=0.0).observe(_Req(0)) is False
+    aud_all = ShadowAuditor(rate=1.0)
+    assert all(aud_all.observe(_Req(i)) for i in range(5))
+    assert aud_all.n_pending == 5
+    aud_all.invalidate_reference()
+    assert aud_all.n_pending == 0                    # hot swap drops pending
+
+
+def test_replay_saved_bundle():
+    """One-command repro: LOOM_AUDIT_BUNDLE=<bundle.npz> pytest -k
+    replay_saved_bundle. Skips when no bundle is supplied."""
+    path = os.environ.get("LOOM_AUDIT_BUNDLE")
+    if not path:
+        pytest.skip("set LOOM_AUDIT_BUNDLE=<divergence .npz> to replay")
+    b = replay_bundle(path)
+    assert b["diverged"], "bundle's served stream matches its reference"
+    assert b["reproduced"], "reference oracle did not reproduce the bundle"
+
+
+def test_bundle_roundtrip_silent_metadata(tmp_path):
+    aud = ShadowAuditor(rate=1.0, bundle_dir=str(tmp_path))
+    sess = _lm_session()
+    prompt = _prompts(sess.cfg, 1)[0]
+    served = _solo(sess, prompt, 4)
+    wrong = served.copy()
+    wrong[2] ^= 1                                    # silent single-token flip
+    from repro.runtime.audit import AuditRecord
+    rec = AuditRecord(request_id=7, prompt=prompt, gen_len=4,
+                      served=wrong, done_t=0.0)
+    with pytest.raises(guards.SilentDivergenceError) as ei:
+        aud.audit_one(sess, rec)
+    assert ei.value.diverged_at == 2
+    b = load_bundle(ei.value.bundle_path)
+    assert np.array_equal(b["prompt"], prompt)
+    assert np.array_equal(b["served"], wrong)
+    assert np.array_equal(b["ref"], served)
+    assert b["meta"]["diverged_at"] == 2
+    assert b["meta"]["weights_fingerprint"] == sess.fingerprint.digest()
+
+
+# -- always-on lattice: per-dispatch prechecks ------------------------------
+
+def test_precheck_rejects_silent_count_bounds():
+    G = backendlib.GuardedBackend
+    # counts outside [1, w_bits] can only come from corrupt metadata
+    with pytest.raises(guards.WeightIntegrityError):
+        G._check_w_counts((0, 3), 16, 32, 8, "matmul_planes")
+    with pytest.raises(guards.WeightIntegrityError):
+        G._check_w_counts((9, 3), 16, 32, 8, "matmul_planes")
+    # wrong group COUNT is a shape-law violation, not integrity
+    with pytest.raises(guards.BackendShapeError):
+        G._check_w_counts((3,), 16, 32, 8, "matmul_planes")
+    G._check_w_counts((3, 8), 16, 32, 8, "matmul_planes")   # clean: no raise
+    G._check_w_counts(None, 16, 32, 8, "matmul_planes")     # dense: no-op
+    with pytest.raises(guards.WeightIntegrityError):
+        G._check_plane_counts(np.asarray([0, 2]), 8, "conv_planes_dynamic")
+    G._check_plane_counts(np.asarray([1, 8]), 8, "conv_planes_dynamic")
+    # tracers pass through untouched (checked lazily at trace time)
+    G._check_plane_counts(jnp.zeros((2,), jnp.int32) + 1, 8, "x")
+
+
+def test_silent_quarantine_advances_every_op_sticky():
+    be = backendlib.GuardedBackend("pallas_interpret")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        n = be.quarantine("test")
+    assert n == len(backendlib.BACKEND_OPS)
+    for op in backendlib.BACKEND_OPS:
+        assert be.active_backend(op).name == "xla"
+        assert be.fallbacks_by_op[op] == "xla"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert be.quarantine("again") == 0           # chain exhausted: sticky
+
+
+# -- checkpoint save read-back (satellite) ----------------------------------
+
+def test_ckpt_save_verify_catches_silent_leaf_corruption(tmp_path):
+    state = {"w": np.arange(16, dtype=np.float32)}
+    # clean save passes verification
+    ckpt.save_checkpoint(str(tmp_path / "a"), 0, state, verify=True)
+    # a corrupted leaf (flipped AFTER its CRC was recorded) is caught at
+    # SAVE time instead of at first restore
+    with faults.inject("ckpt.leaf_corrupt", times=1):
+        with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+            ckpt.save_checkpoint(str(tmp_path / "b"), 0, state, verify=True)
+    assert "save verify" in str(ei.value)
+    # without verify, the same corruption slips through the save...
+    with faults.inject("ckpt.leaf_corrupt", times=1):
+        ckpt.save_checkpoint(str(tmp_path / "c"), 0, state)
+    # ...and only surfaces at restore (the pre-existing safety net):
+    # every step corrupt -> loud typed failure, arbitrarily later
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            ckpt.restore_latest(str(tmp_path / "c"), state)
+
+
+def test_ckpt_crash_rename_still_loud_with_verify_audit(tmp_path):
+    state = {"w": np.arange(8, dtype=np.float32)}
+    with faults.inject("ckpt.crash_rename",
+                       exc=RuntimeError("simulated crash"), times=1):
+        with pytest.raises(RuntimeError, match="simulated crash"):
+            ckpt.save_checkpoint(str(tmp_path), 0, state, verify=True)
+    assert ckpt.restore_latest(str(tmp_path), state)[0] is None  # no torn dir
+
+
+def test_ckpt_manager_verify_passthrough_audit(tmp_path):
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep_n=2, verify=True)
+    assert mgr.verify is True
+    state = {"w": np.arange(8, dtype=np.float32)}
+    mgr.save_async(0, state)
+    mgr.wait()
+    restored, step = ckpt.restore_latest(str(tmp_path), state)
+    assert step == 0 and np.array_equal(restored["w"], state["w"])
+
+
+# -- stats surface ----------------------------------------------------------
+
+def test_audit_stats_fields_surface_in_health():
+    sess = _lm_session()
+    eng = BatchingEngine(sess, max_batch=2)
+    stats = eng.health()["stats"]
+    for fieldname in ("n_audits", "n_divergences", "n_integrity_checks",
+                      "n_quarantines", "p95_audit_lag_s"):
+        assert fieldname in stats
+    eng.shutdown(5.0)

@@ -34,12 +34,8 @@ from repro.runtime.serving import (DEGRADED, FAILED, ServingSupervisor)
 from repro.runtime.supervisor import TransientWorkerError
 
 
-@pytest.fixture(autouse=True)
-def _clean_faults():
-    faults.reset()
-    yield
-    faults.reset()
-
+# Fault-registry hygiene (reset + leak check) is the repo-root autouse
+# fixture ``_no_fault_leaks`` in conftest.py.
 
 POLICIES = {
     "static": uniform_policy(8, 8),

@@ -44,12 +44,8 @@ from repro.runtime.supervisor import Supervisor, TransientWorkerError
 pytestmark = pytest.mark.chaos
 
 
-@pytest.fixture(autouse=True)
-def _clean_faults():
-    faults.reset()
-    yield
-    faults.reset()
-
+# Fault-registry hygiene (reset + leak check) is the repo-root autouse
+# fixture ``_no_fault_leaks`` in conftest.py.
 
 # -- shared compiled sessions (cached: compiles dominate the suite) ---------
 
@@ -124,6 +120,17 @@ def test_take_counts_without_raising():
         assert faults.take("ckpt.leaf_corrupt") is False  # times=1 default
         assert fault.fired == 1
     assert faults.take("ckpt.leaf_corrupt") is False
+
+
+def test_inject_restores_registry_when_body_raises():
+    """Regression for the leak the autouse conftest fixture polices: a
+    body that raises must still disarm the fault on context exit."""
+    with pytest.raises(RuntimeError, match="body died"):
+        with faults.inject("weights.bitflip", times=None):
+            assert faults.active_points() == ("weights.bitflip",)
+            raise RuntimeError("body died")
+    assert faults.active("weights.bitflip") is None
+    assert faults.active_points() == ()
 
 
 # -- typed error taxonomy ---------------------------------------------------

@@ -47,12 +47,8 @@ from repro.runtime.batching import streams
 from repro.runtime.batching.scheduler import FCFSScheduler
 
 
-@pytest.fixture(autouse=True)
-def _clean_faults():
-    faults.reset()
-    yield
-    faults.reset()
-
+# Fault-registry hygiene (reset + leak check) is the repo-root autouse
+# fixture ``_no_fault_leaks`` in conftest.py.
 
 @functools.lru_cache(maxsize=None)
 def _lm_session(backend: str = "xla"):
